@@ -1,0 +1,56 @@
+"""Fig. 9 reproduction: projected speedup of local-memory embedding pooling
+over a table distributed across N = ceil(table_bytes / HBM) devices.
+
+Paper: a 10 TB table (128 H100s) projects 22.8x-108.2x local-memory
+speedup depending on total message size (#tables batched, pooling factor,
+embedding dim). CSV: table_tb,n_gpus,config,speedup
+"""
+from __future__ import annotations
+
+import io
+
+from repro.core.perf_model import (
+    H100_DGX,
+    EmbeddingWorkload,
+    devices_for_table,
+    local_vs_distributed_speedup,
+)
+
+# message-size extremes, matching the paper's parameter ranges (§5.1)
+CONFIGS = {
+    "small_msgs": dict(num_tables=1, batch_per_device=128, pooling=4,
+                       dim=32),
+    "medium_msgs": dict(num_tables=8, batch_per_device=512, pooling=16,
+                        dim=128),
+    "large_msgs": dict(num_tables=64, batch_per_device=4096, pooling=32,
+                       dim=256),
+}
+TABLE_TB = [0.625, 1.25, 2.5, 5.0, 10.0, 20.0]
+
+
+def run() -> str:
+    out = io.StringIO()
+    print("table_tb,n_gpus,config,speedup", file=out)
+    for tb in TABLE_TB:
+        nbytes = tb * 1e12
+        n = devices_for_table(nbytes, H100_DGX)
+        for name, kw in CONFIGS.items():
+            w = EmbeddingWorkload(**kw)
+            s = local_vs_distributed_speedup(nbytes, w, H100_DGX)
+            print(f"{tb},{n},{name},{s:.1f}", file=out)
+    return out.getvalue()
+
+
+def main():
+    csv = run()
+    print(csv)
+    rows = [r.split(",") for r in csv.strip().splitlines()[1:]]
+    ten = [r for r in rows if r[0] == "10.0"]
+    ten_tb = [float(r[3]) for r in ten]
+    print(f"# 10TB table ({ten[0][1]} GPUs per the 80GB-HBM rule): "
+          f"speedup range {min(ten_tb):.1f}x - {max(ten_tb):.1f}x "
+          f"(paper Fig. 9: 22.8x - 108.2x)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,129 @@
+"""Figs. 6-8 reproduction: per-phase Embedding Bag times across #tables,
+batch size, and pooling factor (permute / gather / reduce-scatter).
+
+The paper measures 8xH100 wall-clock; this container has no GPUs or TPUs,
+so the quantitative curves come from the calibrated α–β model (both
+transports), while the STRUCTURE (bytes entering each phase) is measured
+by tracing the actual distributed pipeline through core/comm.instrument()
+— proving the framework's RW pipeline issues the traffic the model
+prices.
+
+CSV: sweep,value,phase,backend,modeled_us,traced_bytes
+"""
+from __future__ import annotations
+
+import io
+
+import numpy as np
+
+from repro.core.perf_model import (
+    H100_DGX,
+    EmbeddingWorkload,
+    phase_times,
+)
+
+SWEEPS = {
+    # paper §4.4: tables 2..64 (x2), batch in {128, 1024, 4096},
+    # pooling in {4, 8, 16}; embedding dim fixed at 128
+    "tables": [2, 4, 8, 16, 32, 64],
+    "batch": [128, 1024, 4096],
+    "pooling": [4, 8, 16],
+}
+BASE = dict(num_tables=8, batch_per_device=1024, pooling=8, dim=128)
+
+
+def traced_bytes(num_tables: int, batch: int, pooling: int, dim: int,
+                 n_devices: int = 8):
+    """Bytes per phase from the REAL pipeline via comm instrumentation.
+
+    Uses abstract lowering on a single-device donor mesh context — the
+    instrumentation records payload sizes at trace time, no execution.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import PartitionSpec as P
+    from repro.core import comm
+    from repro.core.embedding_bag import (
+        EmbeddingBagConfig, pooled_lookup_sharded)
+    from repro.core.jagged import JaggedBatch
+
+    cfg = EmbeddingBagConfig(num_tables=num_tables, rows_per_table=1 << 20,
+                             dim=dim, sharding="row", rw_impl="a2a")
+    devs = jax.devices()
+    if len(devs) < n_devices:           # abstract trace against a fake axis
+        n_devices = len(devs)
+    mesh = jax.make_mesh((n_devices,), ("model",))
+    table_sds = jax.ShapeDtypeStruct(
+        (num_tables, (1 << 20), dim), jnp.float32)
+    batch_sds = JaggedBatch(
+        indices=jax.ShapeDtypeStruct((num_tables, batch, pooling),
+                                     jnp.int32),
+        lengths=jax.ShapeDtypeStruct((num_tables, batch), jnp.int32),
+    )
+    with comm.instrument() as events:
+        jax.jit(jax.shard_map(
+            lambda t, b: pooled_lookup_sharded(t, b, cfg),
+            mesh=mesh,
+            in_specs=(P(None, "model", None), P()),
+            out_specs=P(), check_vma=False,
+        )).lower(table_sds, batch_sds)
+    phases = {"permute": 0, "gather": 0, "reduce_scatter": 0}
+    for e in events:
+        if e.op == "all_to_all":
+            phases["permute"] += e.bytes_in
+        elif e.op in ("reduce_scatter",):
+            phases["reduce_scatter"] += e.bytes_in
+        elif e.op == "all_gather":
+            pass                         # output replication (not a phase)
+    return phases
+
+
+def run() -> str:
+    out = io.StringIO()
+    print("sweep,value,phase,backend,modeled_us,traced_bytes", file=out)
+    for sweep, values in SWEEPS.items():
+        for v in values:
+            kw = dict(BASE)
+            kw[{"tables": "num_tables", "batch": "batch_per_device",
+                "pooling": "pooling"}[sweep]] = v
+            w = EmbeddingWorkload(**kw)
+            tb = traced_bytes(kw["num_tables"], kw["batch_per_device"],
+                              kw["pooling"], kw["dim"])
+            for onesided, name in ((False, "bulk"), (True, "onesided")):
+                pt = phase_times(w, 8, H100_DGX, onesided=onesided)
+                for phase, t in pt.items():
+                    print(f"{sweep},{v},{phase},{name},{t*1e6:.2f},"
+                          f"{tb.get(phase, 0)}", file=out)
+    return out.getvalue()
+
+
+def main():
+    csv = run()
+    print(csv)
+    # paper finding: one-sided wins small total message sizes, bulk wins
+    # large — verify the flip exists within the swept range
+    import csv as _csv
+    rows = list(_csv.DictReader(io.StringIO(csv)))
+    by = {}
+    for r in rows:
+        key = (r["sweep"], r["value"], r["phase"], r["backend"])
+        by[key] = float(r["modeled_us"])
+    # The paper's crossover claim is per-primitive (§3): the index-permute
+    # a2a is small-message (one-sided wins) until the batch grows.
+    small = by[("batch", "128", "permute", "onesided")] < \
+        by[("batch", "128", "permute", "bulk")]
+    large = by[("batch", "4096", "permute", "bulk")] < \
+        by[("batch", "4096", "permute", "onesided")]
+    # The output reduce-scatter is large-message at every swept config —
+    # bulk wins throughout, matching Figs 6-8's reduce-scatter panels.
+    rs = all(by[("batch", v, "reduce_scatter", "bulk")] <
+             by[("batch", v, "reduce_scatter", "onesided")]
+             for v in ("128", "1024", "4096"))
+    print(f"# permute: onesided wins @batch=128: {small}; "
+          f"bulk wins @batch=4096: {large} (paper: crossover)")
+    print(f"# reduce-scatter: bulk wins at all batches: {rs} "
+          f"(paper: RS messages are past crossover)")
+
+
+if __name__ == "__main__":
+    main()

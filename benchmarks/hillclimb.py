@@ -1,0 +1,71 @@
+"""§Perf hillclimb runner: compile one cell with overrides, print its
+roofline terms next to the recorded baseline.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb rwkv6-1.6b train_4k \
+        --tag hc1_chunk64 --set rwkv_chunk=64
+"""
+import argparse
+import ast
+import json
+import os
+import sys
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("arch")
+    ap.add_argument("shape")
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig override key=value")
+    ap.add_argument("--sharding-set", action="append", default=[],
+                    help="ShardingConfig override key=value")
+    ap.add_argument("--opt-state-dtype", default="int8")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        try:
+            overrides[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            overrides[k] = v
+    sh_over = {}
+    for kv in args.sharding_set:
+        k, v = kv.split("=", 1)
+        try:
+            sh_over[k] = ast.literal_eval(v)
+        except (ValueError, SyntaxError):
+            sh_over[k] = v
+
+    # import order matters: dryrun sets XLA_FLAGS before jax init
+    from repro.launch import dryrun
+    from repro.configs.base import ShardingConfig, TrainConfig
+    sharding_cfg = ShardingConfig(**sh_over) if sh_over else None
+    tc = TrainConfig(remat=True, optimizer_state_dtype=args.opt_state_dtype)
+    rec = dryrun.run_cell(args.arch, args.shape, False,
+                          extra_tags=args.tag, overrides=overrides,
+                          tc=tc, sharding_cfg=sharding_cfg)
+
+    from benchmarks.roofline import analyze_record, ART
+    row = analyze_record(rec)
+    base_path = os.path.join(
+        ART, f"{args.arch}__{args.shape}__pod1.json")
+    print(f"\n=== {args.tag}: {args.arch}/{args.shape} "
+          f"overrides={overrides} sharding={sh_over}")
+    if os.path.exists(base_path):
+        base = analyze_record(json.load(open(base_path)))
+        for k in ("compute_s", "memory_s", "collective_s",
+                  "roofline_fraction"):
+            delta = (row[k] / base[k] - 1) * 100 if base[k] else float("nan")
+            print(f"  {k:16s} base={base[k]:12.4f}  new={row[k]:12.4f}  "
+                  f"({delta:+.1f}%)")
+        print(f"  dominant: {base['dominant']} -> {row['dominant']}")
+    else:
+        for k in ("compute_s", "memory_s", "collective_s",
+                  "roofline_fraction"):
+            print(f"  {k:16s} {row[k]:12.4f}")
+
+
+if __name__ == "__main__":
+    main()

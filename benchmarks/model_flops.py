@@ -1,0 +1,75 @@
+"""Analytic MODEL_FLOPS per (arch x shape) — the 'useful compute' yardstick.
+
+Conventions (global, whole step):
+  train:   6 * N_active * tokens  (+ attention: 6 * 2*B*S^2*Heff/2 per
+           layer — causal halves the score matrix)
+  prefill: 2 * N_active * tokens  (+ fwd attention)
+  decode:  2 * N_active * B       (+ one-token attention over S_ctx)
+
+The ratio MODEL_FLOPS / HLO_FLOPS exposes remat recompute, masked-block
+waste in chunked attention, MoE capacity slack, and padding.
+"""
+from __future__ import annotations
+
+from repro import configs
+from repro.configs.base import SHAPES, ModelConfig, ShapeConfig
+
+
+def _attention_flops_per_layer_fwd(cfg: ModelConfig, B: int, S: int,
+                                   causal: bool = True) -> float:
+    if cfg.attention == "none":
+        # rwkv wkv state update: ~3 * hs ops per channel per token
+        return 3.0 * 2 * B * S * cfg.d_model * cfg.rwkv_head_size
+    H = cfg.num_heads
+    if cfg.attention == "mla" and cfg.mla:
+        hd_k = cfg.mla.qk_nope_head_dim + cfg.mla.qk_rope_head_dim
+        hd_v = cfg.mla.v_head_dim
+    else:
+        hd_k = hd_v = cfg.head_dim
+    full = 2.0 * B * S * S * H * (hd_k + hd_v)
+    if cfg.window and S > cfg.window:
+        # sliding window: S*W score matrix (global layers handled below)
+        n_glob = len(cfg.global_attn_layers)
+        frac_glob = n_glob / max(1, cfg.num_layers)
+        win = 2.0 * B * S * cfg.window * H * (hd_k + hd_v)
+        return frac_glob * (full * 0.5 if causal else full) + \
+            (1 - frac_glob) * win
+    return full * 0.5 if causal else full
+
+
+def model_flops(arch: str, shape_name: str) -> dict:
+    cfg = configs.get_config(arch)
+    shape = SHAPES[shape_name]
+    B, S = shape.global_batch, shape.seq_len
+    n_active = cfg.active_param_count()
+    L = cfg.num_layers + cfg.encoder_layers
+
+    if shape.kind == "train":
+        tokens = B * S
+        param_term = 6.0 * n_active * tokens
+        attn = 3.0 * L * _attention_flops_per_layer_fwd(cfg, B, S)
+    elif shape.kind == "prefill":
+        tokens = B * S
+        param_term = 2.0 * n_active * tokens
+        attn = L * _attention_flops_per_layer_fwd(cfg, B, S)
+    else:  # decode: one token per sample against an S-token cache
+        param_term = 2.0 * n_active * B
+        if cfg.attention == "none":
+            attn = L * 3.0 * 2 * B * cfg.d_model * cfg.rwkv_head_size
+        else:
+            H = cfg.num_heads
+            if cfg.attention == "mla" and cfg.mla:
+                hd = cfg.mla.kv_lora_rank + cfg.mla.qk_rope_head_dim
+                attn = L * 2.0 * B * S * H * (2 * hd)
+            else:
+                ctx = min(S, cfg.window) if cfg.window else S
+                n_glob = len(cfg.global_attn_layers)
+                attn = (2.0 * B * H * cfg.head_dim * 2 *
+                        (n_glob * S + (L - n_glob) * ctx))
+    return {
+        "param_flops": param_term,
+        "attention_flops": attn,
+        "total": param_term + attn,
+        "n_active": n_active,
+        "n_total": cfg.param_count(),
+    }

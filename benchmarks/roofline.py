@@ -1,0 +1,145 @@
+"""Deliverable (g): roofline terms per (arch x shape x mesh) from the
+compiled dry-run artifacts (dryrun_artifacts/*.json).
+
+Terms (per device, TPU v5e constants):
+  compute_s    = HLO_FLOPs/dev / 197e12        (bf16 peak)
+  memory_s     = HBM_bytes/dev / 819e9
+  collective_s = collective_bytes/dev / 50e9   (per-link ICI)
+
+Native-dtype normalization: the CPU backend upcasts bf16 compute to f32
+(verified: bf16 dot -> f32 all-reduce in CPU HLO), so float traffic from
+the CPU-compiled module counts 4 B/elem where a TPU bf16 program moves 2.
+Float element counts are invariant, so bytes are re-priced at the model's
+native dtype (DESIGN.md §Hardware adaptation).
+
+"roofline fraction" = useful_time / dominant_term, where useful_time =
+MODEL_FLOPS/dev / peak — i.e. projected MFU if the step ran exactly at
+the binding roofline. This is the score the perf loop (§Perf) drives up.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import sys
+
+from benchmarks.model_flops import model_flops
+from repro import configs
+from repro.core.perf_model import ICI_LINK_Bps, V5E_HBM_Bps, V5E_PEAK_BF16
+
+ART = os.path.join(os.path.dirname(__file__), "..", "dryrun_artifacts")
+
+
+def normalized_bytes(rec: dict, native_itemsize: int):
+    """(collective_bytes, hbm_bytes) re-priced at the native float dtype."""
+    coll_raw = rec["collective_bytes_per_device"]
+    coll_fe = rec.get("collective_float_elems_per_device", {})
+    coll = 0.0
+    for op, b in coll_raw.items():
+        fe = coll_fe.get(op, 0.0)
+        int_bytes = max(0.0, b - fe * 4.0)     # CPU floats are f32
+        coll += int_bytes + fe * native_itemsize
+    hbm_fe = rec.get("hbm_float_elems_per_device", 0.0)
+    hbm_ob = rec.get("hbm_other_bytes_per_device", 0.0)
+    hbm = hbm_ob + hbm_fe * native_itemsize
+    return coll, hbm
+
+
+def analyze_record(rec: dict) -> dict:
+    cfg = configs.get_config(rec["arch"])
+    native = 2 if cfg.dtype == "bfloat16" else 4
+    coll, hbm = normalized_bytes(rec, native)
+    n_dev = rec["n_devices"]
+    flops_dev = rec["flops_per_device"]
+    compute_s = flops_dev / V5E_PEAK_BF16
+    memory_s = hbm / V5E_HBM_Bps
+    collective_s = coll / ICI_LINK_Bps
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    useful_s = (mf["total"] / n_dev) / V5E_PEAK_BF16
+    frac = useful_s / max(terms.values()) if max(terms.values()) > 0 else 0.0
+    return {
+        **{k: rec[k] for k in ("arch", "shape", "multi_pod", "n_devices")},
+        **terms,
+        "dominant": dominant.replace("_s", ""),
+        "model_flops_global": mf["total"],
+        "useful_compute_fraction": mf["total"] / n_dev / max(flops_dev, 1),
+        "roofline_fraction": frac,
+        "coll_bytes_norm": coll,
+        "hbm_bytes_norm": hbm,
+        "temp_bytes_dev": rec["memory_analysis"].get("temp_size_in_bytes"),
+        "arg_bytes_dev": rec["memory_analysis"].get("argument_size_in_bytes"),
+    }
+
+
+def load_all(art_dir: str = ART, suffix: str = ""):
+    rows = []
+    for p in sorted(glob.glob(os.path.join(art_dir, "*.json"))):
+        base = os.path.basename(p)[:-5]
+        parts = base.split("__")
+        if len(parts) < 3:              # not a cell artifact (e.g. summary)
+            continue
+        if suffix and (len(parts) < 4 or parts[3] != suffix):
+            continue
+        if not suffix and len(parts) > 3:
+            continue
+        rec = json.load(open(p))
+        if rec.get("status") != "ok":
+            rows.append({"arch": rec["arch"], "shape": rec["shape"],
+                         "multi_pod": rec.get("multi_pod"),
+                         "skipped": rec.get("skip_reason", "failed")})
+            continue
+        rows.append(analyze_record(rec))
+    return rows
+
+
+def fmt_ms(x):
+    return f"{x*1e3:9.3f}"
+
+
+def markdown_table(rows, multi_pod=False) -> str:
+    hdr = ("| arch | shape | compute ms | memory ms | collective ms | "
+           "dominant | useful/HLO | roofline frac |")
+    sep = "|" + "---|" * 8
+    lines = [hdr, sep]
+    for r in rows:
+        if r.get("multi_pod") != multi_pod:
+            continue
+        if "skipped" in r:
+            lines.append(f"| {r['arch']} | {r['shape']} | — | — | — | "
+                         f"skipped | — | — |")
+            continue
+        lines.append(
+            f"| {r['arch']} | {r['shape']} |{fmt_ms(r['compute_s'])} |"
+            f"{fmt_ms(r['memory_s'])} |{fmt_ms(r['collective_s'])} | "
+            f"{r['dominant']} | {r['useful_compute_fraction']:.2f} | "
+            f"{r['roofline_fraction']:.3f} |")
+    return "\n".join(lines)
+
+
+def main():
+    rows = load_all()
+    print("# Roofline — single-pod (16x16 = 256 chips)")
+    print(markdown_table(rows, multi_pod=False))
+    print()
+    print("# Multi-pod (2x16x16 = 512 chips) — sharding proof")
+    print(markdown_table(rows, multi_pod=True))
+    ok = [r for r in rows if "skipped" not in r and not r["multi_pod"]]
+    if ok:
+        worst = min(ok, key=lambda r: r["roofline_fraction"])
+        collb = max(ok, key=lambda r: r["collective_s"] /
+                    max(r["compute_s"], 1e-12))
+        print()
+        print(f"# worst roofline fraction: {worst['arch']}/{worst['shape']}"
+              f" ({worst['roofline_fraction']:.3f})")
+        print(f"# most collective-bound: {collb['arch']}/{collb['shape']}")
+    out = os.path.join(ART, "roofline_summary.json")
+    with open(out, "w") as f:
+        json.dump(rows, f, indent=1)
+    print(f"# summary written to {out}")
+
+
+if __name__ == "__main__":
+    main()

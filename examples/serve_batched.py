@@ -1,0 +1,44 @@
+"""Batched serving with continuous batching: requests arrive, slots are
+admitted/evicted, one jitted decode_step advances every active sequence.
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import time
+
+import numpy as np
+import jax
+
+from repro import configs
+from repro.models import lm
+from repro.serving.engine import ContinuousBatcher, Request
+
+
+def main():
+    cfg = configs.get_smoke_config("granite-8b")
+    params = lm.init_params(jax.random.key(0), cfg)
+    eng = ContinuousBatcher(params, cfg, num_slots=4, max_len=64, eos_id=-1)
+
+    rng = np.random.default_rng(0)
+    n_req = 10
+    for rid in range(n_req):
+        eng.submit(Request(
+            rid=rid,
+            prompt=rng.integers(0, cfg.vocab_size,
+                                rng.integers(4, 12)).astype(np.int32),
+            max_new=int(rng.integers(4, 10))))
+
+    t0 = time.perf_counter()
+    done = eng.run_to_completion()
+    dt = time.perf_counter() - t0
+    total = sum(len(r.generated) for r in done.values())
+    print(f"served {len(done)}/{n_req} requests, {total} tokens in "
+          f"{dt:.2f}s ({total/dt:.1f} tok/s, 4 slots, continuous batching)")
+    for rid in sorted(done):
+        r = done[rid]
+        print(f"  req {rid}: prompt_len={len(r.prompt)} -> "
+              f"{len(r.generated)} tokens: {r.generated}")
+    assert len(done) == n_req
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,8 @@
+"""repro: distributed embedding-bag framework for DLRM + LM architectures on TPU.
+
+Reproduction of "Dissecting Embedding Bag Performance in DLRM Inference"
+(Ambati, Ding, Diep — Celestial AI, 2025), adapted from H100/NCCL/NVSHMEM to
+TPU v5e / XLA collectives / Pallas one-sided DMA.
+"""
+
+__version__ = "1.0.0"

@@ -1,0 +1,6 @@
+from repro.checkpoint.store import (  # noqa: F401
+    latest_step,
+    restore,
+    save,
+    wait_all,
+)

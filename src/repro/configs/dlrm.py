@@ -1,0 +1,75 @@
+"""DLRM — the paper's own model (Fig. 2 canonical architecture).
+
+Criteo-Terabyte-like defaults: 13 dense features -> bottom MLP [512,256,128];
+26 sparse features -> 26 embedding tables (dim 128); dot-product feature
+interaction; top MLP [1024,1024,512,256,1]. Table sizes follow the paper's
+benchmarking assumption (§4.3): equal rows per table, even row-wise split.
+
+``CONFIG`` is the inference-benchmark scale used in §4.4/§5 (rows kept at
+1M so CPU runs stay tractable; the Fig. 9 projection sweeps table_bytes
+analytically); ``smoke()`` is the CPU test scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+from repro.core.embedding_bag import EmbeddingBagConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DLRMConfig:
+    num_dense_features: int = 13
+    num_sparse_features: int = 26        # == num embedding tables
+    embedding_dim: int = 128             # paper fixes 128
+    rows_per_table: int = 1_000_000
+    pooling: int = 32                    # paper §5: pooling factor per GPU
+    bottom_mlp: Tuple[int, ...] = (512, 256, 128)
+    top_mlp: Tuple[int, ...] = (1024, 1024, 512, 256, 1)
+    interaction: str = "dot"             # dot | cat
+    sharding: str = "row"                # paper's RW focus
+    rw_impl: str = "allgather"           # allgather | a2a (paper-faithful)
+    rw_backend: str = "bulk"             # bulk | onesided
+    dtype: str = "float32"
+
+    def __post_init__(self):
+        if self.interaction == "dot" and \
+                self.bottom_mlp[-1] != self.embedding_dim:
+            raise ValueError(
+                f"dot interaction needs bottom_mlp[-1] "
+                f"({self.bottom_mlp[-1]}) == embedding_dim "
+                f"({self.embedding_dim})")
+
+    def embedding_config(self) -> EmbeddingBagConfig:
+        return EmbeddingBagConfig(
+            num_tables=self.num_sparse_features,
+            rows_per_table=self.rows_per_table,
+            dim=self.embedding_dim,
+            sharding=self.sharding,
+            rw_impl=self.rw_impl,
+            rw_backend=self.rw_backend,
+            dtype=self.dtype,
+        )
+
+    @property
+    def interaction_dim(self) -> int:
+        """Output width of the feature-interaction layer."""
+        n = self.num_sparse_features + 1          # + bottom-MLP vector
+        if self.interaction == "dot":
+            return self.bottom_mlp[-1] + n * (n - 1) // 2
+        return (n) * self.embedding_dim
+
+
+CONFIG = DLRMConfig()
+
+
+def smoke() -> DLRMConfig:
+    return DLRMConfig(
+        num_dense_features=4,
+        num_sparse_features=8,
+        embedding_dim=16,
+        rows_per_table=128,
+        pooling=4,
+        bottom_mlp=(32, 16),
+        top_mlp=(64, 32, 1),
+    )

@@ -1,0 +1,48 @@
+"""rwkv6-1.6b — Finch: attention-free, data-dependent decay. [arXiv:2404.05892]
+
+Assigned: 24L d_model=2048 (attn-free) d_ff=7168 vocab=65536.
+Head size 64 (32 heads); per-head (64, 64) wkv state → O(1) decode state,
+so ``long_500k`` runs. Time-mix uses the Finch data-dependent decay
+w = exp(-exp(w0 + lora(x))) with token-shift low-rank interpolation.
+"""
+from repro.configs.base import ModelConfig
+
+
+CONFIG = ModelConfig(
+    name="rwkv6-1.6b",
+    family="ssm",
+    num_layers=24,
+    d_model=2048,
+    num_heads=32,               # d_model / rwkv_head_size
+    num_kv_heads=32,
+    d_ff=7168,
+    vocab_size=65536,
+    attention="none",
+    rwkv_head_size=64,
+    # §Perf hillclimb result: chunk-parallel time-mix. The naive per-step
+    # scan is memory-catastrophic (12 671 s HBM term on train_4k); chunked
+    # at 1024 it is 1.69 s (7500x) for +14% FLOPs — see EXPERIMENTS.md.
+    # Set 0 to reproduce the paper-faithful per-step baseline.
+    rwkv_chunk=1024,
+    activation="relu2",         # rwkv channel-mix uses squared relu
+    gated_ffn=False,
+    norm="layernorm",
+)
+
+
+def smoke() -> ModelConfig:
+    return ModelConfig(
+        name="rwkv6-smoke",
+        family="ssm",
+        num_layers=2,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=4,
+        d_ff=128,
+        vocab_size=256,
+        attention="none",
+        rwkv_head_size=16,
+        activation="relu2",
+        gated_ffn=False,
+        norm="layernorm",
+    )

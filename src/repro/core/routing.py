@@ -1,0 +1,75 @@
+"""Fixed-capacity bucketing — the paper's index-permute kernel, generalized.
+
+The paper's phase-1 "permute kernel" (§4.2) routes embedding lookup ids to
+owner shards through fixed-shape all-to-all buffers. The same primitive
+routes MoE token assignments to expert-owner ranks (GShard-style), so it
+lives here as a reusable op:
+
+    bucketed, slot, dropped = fixed_capacity_bucket(dest, n_buckets, cap, payload)
+
+``slot`` lets the caller invert the permutation after a round trip
+(``unbucket``), which is exactly the return path of both the embedding
+reduce-scatter and the MoE combine.
+"""
+from __future__ import annotations
+
+from typing import Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def bucket_positions(dest: jax.Array, num_buckets: int, capacity: int):
+    """Stable position of each element within its destination bucket.
+
+    Returns (slot, keep, dropped):
+      slot: (N,) int32 — flat index ``dest*capacity + pos`` for kept
+            elements, ``num_buckets*capacity`` (one-past-end) for dropped.
+      keep: (N,) bool — fits within capacity.
+      dropped: () int32 — overflow count.
+    """
+    onehot = jax.nn.one_hot(dest, num_buckets, dtype=jnp.int32)      # (N, E)
+    pos = jnp.take_along_axis(jnp.cumsum(onehot, axis=0) - 1,
+                              dest[:, None], axis=1)[:, 0]
+    keep = pos < capacity
+    dropped = jnp.sum(~keep)
+    oob = num_buckets * capacity
+    slot = jnp.where(keep, dest * capacity + pos, oob).astype(jnp.int32)
+    return slot, keep, dropped
+
+
+def scatter_to_buckets(slot: jax.Array, payload: jax.Array,
+                       num_buckets: int, capacity: int, fill=0):
+    """(N, ...) payload -> (num_buckets, capacity, ...) via ``slot``."""
+    size = num_buckets * capacity
+    trail = payload.shape[1:]
+    buf = jnp.full((size + 1,) + trail, fill, payload.dtype)
+    buf = buf.at[slot].set(payload, mode="drop")
+    return buf[:size].reshape((num_buckets, capacity) + trail)
+
+
+def gather_from_buckets(slot: jax.Array, buckets: jax.Array):
+    """Inverse of scatter: element j <- buckets.flat[slot[j]] (dropped -> 0)."""
+    nb, cap = buckets.shape[:2]
+    trail = buckets.shape[2:]
+    flat = buckets.reshape((nb * cap,) + trail)
+    flat = jnp.concatenate([flat, jnp.zeros((1,) + trail, flat.dtype)], axis=0)
+    return flat[slot]
+
+
+def fixed_capacity_bucket(
+    dest: jax.Array, num_buckets: int, capacity: int,
+    payloads: Sequence[jax.Array], fills: Sequence = None,
+) -> Tuple[list, jax.Array, jax.Array]:
+    """Bucket several parallel payload arrays by ``dest``.
+
+    Returns ([bucketed...], slot, dropped). Overflow elements are dropped
+    (slot = one-past-end) and must be handled by the caller — for the
+    embedding/MoE paths they contribute zero, matching MoE capacity
+    semantics; benches report the drop rate.
+    """
+    slot, _, dropped = bucket_positions(dest, num_buckets, capacity)
+    fills = fills or [0] * len(payloads)
+    out = [scatter_to_buckets(slot, p, num_buckets, capacity, f)
+           for p, f in zip(payloads, fills)]
+    return out, slot, dropped

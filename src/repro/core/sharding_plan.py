@@ -1,0 +1,111 @@
+"""Cost-model-driven sharding planner for embedding tables.
+
+The paper fixes row-wise parallelism (§4.2) and notes TW/CW as the
+alternatives (§4.1). This planner generalizes: given a set of tables and a
+mesh, pick per-table strategies minimizing the modeled step time under the
+per-device HBM capacity constraint — a small, deterministic analogue of
+AutoShard/DreamShard (paper refs [4, 5]).
+
+Strategies considered per table:
+  * TW — place the whole table on one shard (zero lookup comm in our 2-D
+    mesh since indices are model-axis replicated; output all-gather only).
+    Requires table_bytes <= capacity budget of a shard.
+  * RW — split rows across all shards (paper's scheme): pays index permute
+    + reduce-scatter, balances memory perfectly.
+  * CW — split columns: local gather of D/E slice, output all-gather;
+    balances memory, multiplies per-row DMA descriptors by E (bad for
+    small dims — the planner penalizes dim/E < 32 lanes).
+
+Greedy assignment: sort tables by bytes descending; TW-pack into the
+least-loaded shard while it fits the per-shard budget; RW the rest
+(CW only when the caller forces it — it exists for completeness and for
+the benchmark sweeps, matching the paper's taxonomy).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Sequence
+
+from repro.core.perf_model import (
+    EmbeddingWorkload,
+    Hardware,
+    TPU_V5E,
+    collective_time,
+)
+
+
+@dataclasses.dataclass(frozen=True)
+class TableSpec:
+    name: str
+    rows: int
+    dim: int
+    pooling: int
+    dtype_bytes: int = 4
+
+    @property
+    def bytes(self) -> int:
+        return self.rows * self.dim * self.dtype_bytes
+
+
+@dataclasses.dataclass
+class Placement:
+    table: TableSpec
+    strategy: str          # "table" | "row" | "column"
+    shard: int             # owning shard for TW, -1 otherwise
+    est_time_s: float
+
+
+@dataclasses.dataclass
+class ShardingPlan:
+    placements: List[Placement]
+    per_shard_bytes: List[int]
+
+    def strategy_of(self, name: str) -> str:
+        for p in self.placements:
+            if p.table.name == name:
+                return p.strategy
+        raise KeyError(name)
+
+
+def _tw_time(t: TableSpec, batch: int, n: int, hw: Hardware) -> float:
+    gather = batch * t.pooling * t.dim * t.dtype_bytes / hw.hbm_Bps
+    out = batch * t.dim * t.dtype_bytes
+    return gather + collective_time("all_gather", out, n, hw.bulk)
+
+
+def _rw_time(t: TableSpec, batch: int, n: int, hw: Hardware) -> float:
+    idx = batch * t.pooling * 4
+    gather = batch * t.pooling * t.dim * t.dtype_bytes / (n * hw.hbm_Bps)
+    out = batch * t.dim * t.dtype_bytes
+    return (
+        collective_time("all_to_all", idx / n, n, hw.bulk)
+        + gather
+        + collective_time("reduce_scatter", out, n, hw.bulk)
+    )
+
+
+def plan(
+    tables: Sequence[TableSpec],
+    *,
+    num_shards: int,
+    batch_per_shard: int,
+    hbm_budget_bytes: float,
+    hw: Hardware = TPU_V5E,
+) -> ShardingPlan:
+    """Greedy TW-pack + RW-fallback planner (see module docstring)."""
+    loads = [0] * num_shards
+    placements: List[Placement] = []
+    for t in sorted(tables, key=lambda t: -t.bytes):
+        tw = _tw_time(t, batch_per_shard, num_shards, hw)
+        rw = _rw_time(t, batch_per_shard, num_shards, hw)
+        target = min(range(num_shards), key=lambda s: loads[s])
+        fits = loads[target] + t.bytes <= hbm_budget_bytes
+        if fits and tw <= rw:
+            loads[target] += t.bytes
+            placements.append(Placement(t, "table", target, tw))
+        else:
+            per = t.bytes // num_shards
+            for s in range(num_shards):
+                loads[s] += per
+            placements.append(Placement(t, "row", -1, rw))
+    return ShardingPlan(placements, loads)

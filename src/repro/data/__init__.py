@@ -1,0 +1,5 @@
+from repro.data.synthetic import (  # noqa: F401
+    dlrm_batches,
+    lm_batches,
+    Prefetcher,
+)

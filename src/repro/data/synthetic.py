@@ -1,0 +1,93 @@
+"""Deterministic synthetic data pipelines (LM tokens + DLRM Criteo-like).
+
+Determinism contract (fault tolerance): batch at step ``s`` is a pure
+function of (seed, s) — a restarted trainer resuming from a checkpoint at
+step k sees bitwise-identical batches from step k onward, so recovery is
+exactly-once. The paper's generator (§4.4) used uniform random ids; a
+``zipf_a`` option adds the skewed row-popularity of real CTR traffic.
+
+``Prefetcher`` runs the generator on a host thread with a bounded queue —
+the standard input-pipeline overlap (generation hides behind device steps).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from typing import Dict, Iterator, Optional
+
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.configs.dlrm import DLRMConfig
+from repro.core.jagged import JaggedBatch, random_jagged_batch
+
+
+def lm_batches(cfg: ModelConfig, batch: int, seq: int, *,
+               seed: int = 0, start_step: int = 0,
+               zipf_a: float = 1.2) -> Iterator[Dict[str, np.ndarray]]:
+    """Yields {"tokens" (B,S), "labels" (B,S)} (+frames/patches stubs)."""
+    step = start_step
+    while True:
+        rng = np.random.default_rng((seed, step))
+        # zipf-distributed token ids (natural-language-like rank-frequency)
+        ranks = rng.zipf(zipf_a, size=(batch, seq + 1)).astype(np.int64)
+        toks = np.minimum(ranks - 1, cfg.vocab_size - 1).astype(np.int32)
+        out = {"tokens": toks[:, :-1], "labels": toks[:, 1:]}
+        if cfg.family == "audio":
+            out["frames"] = rng.standard_normal(
+                (batch, cfg.encoder_seq_len, cfg.d_model)).astype(np.float32)
+        if cfg.family == "vlm":
+            out["patches"] = rng.standard_normal(
+                (batch, cfg.vision_tokens, cfg.vision_dim)).astype(np.float32)
+        yield out
+        step += 1
+
+
+def dlrm_batches(cfg: DLRMConfig, batch: int, *, seed: int = 0,
+                 start_step: int = 0, zipf_a: Optional[float] = None,
+                 fixed_pooling: bool = True) -> Iterator[Dict]:
+    """Yields {"dense", "batch": JaggedBatch, "labels"} per step."""
+    step = start_step
+    while True:
+        rng = np.random.default_rng((seed, step))
+        jb = random_jagged_batch(
+            rng, cfg.num_sparse_features, batch, cfg.pooling,
+            cfg.rows_per_table, fixed_pooling=fixed_pooling, zipf_a=zipf_a)
+        yield {
+            "dense": rng.standard_normal(
+                (batch, cfg.num_dense_features)).astype(np.float32),
+            "batch": jb,
+            "labels": (rng.random(batch) < 0.25).astype(np.float32),
+        }
+        step += 1
+
+
+class Prefetcher:
+    """Bounded-queue host prefetch around any batch iterator."""
+
+    def __init__(self, it: Iterator, depth: int = 2):
+        self._q: "queue.Queue" = queue.Queue(maxsize=depth)
+        self._stop = threading.Event()
+
+        def worker():
+            for item in it:
+                if self._stop.is_set():
+                    return
+                self._q.put(item)
+
+        self._t = threading.Thread(target=worker, daemon=True)
+        self._t.start()
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        return self._q.get()
+
+    def close(self):
+        self._stop.set()
+        try:
+            while True:
+                self._q.get_nowait()
+        except queue.Empty:
+            pass

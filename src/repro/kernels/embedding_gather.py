@@ -1,0 +1,101 @@
+"""Pallas TPU kernel for the embedding-bag gather+pool phase.
+
+The paper's phase-2 "gather kernel" (§4.3) retrieves ``L`` rows per sample
+from an HBM-resident table and pools (weighted-sums) them. On GPU this is a
+CUDA gather; the TPU-native formulation is *scalar-prefetch driven DMA*:
+
+  - lookup ids are scalar-prefetched into SMEM before the kernel runs,
+  - the table BlockSpec ``index_map`` reads the prefetched ids, so the
+    Pallas pipeline DMAs exactly the rows ``table[idx[b, l]]`` HBM->VMEM
+    (one (1, Db) block per grid step, double-buffered by the pipeline),
+  - the kernel body accumulates ``w[b, l] * row`` into the f32 output
+    block in VREGs.
+
+Grid: ``(B, num_D_blocks, L)`` — the L axis is innermost ("arbitrary"
+semantics) so all visits to an output block ``(b, d)`` are consecutive and
+accumulation is legal; B and D blocks are parallel.
+
+Two variants:
+  * ``gather_pool_pallas``        — plain lookup (indices pre-validated).
+  * the RW-masked variant is expressed by pre-masking: ops.py maps
+    out-of-shard ids to row 0 with weight 0, so ONE kernel serves both the
+    single-device and the row-wise-parallel (paper §4.2) paths.
+
+VMEM budget per grid step: 2 double-buffered (1, Db) table blocks +
+(1, Db) f32 accumulator + (1, L) weights — Db is chosen ≤ 2048 lanes so the
+working set stays ≪ 1 MiB, far under v5e VMEM.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+DEFAULT_D_BLOCK = 2048  # lanes per block; multiple of 128 (MXU/VPU lane width)
+
+
+def _gather_pool_kernel(idx_ref, w_ref, table_blk, out_blk, *, L: int):
+    """One grid step: out[b, d_blk] += w[b, l] * table[idx[b, l], d_blk]."""
+    l = pl.program_id(2)
+
+    @pl.when(l == 0)
+    def _init():
+        out_blk[...] = jnp.zeros_like(out_blk)
+
+    w = w_ref[0, l]
+    out_blk[...] += table_blk[...].astype(jnp.float32) * w
+
+
+def _pick_d_block(D: int) -> int:
+    if D % 128 == 0:
+        return min(D, DEFAULT_D_BLOCK)
+    # Non-128-multiple embedding dims (e.g. DLRM D=32/64): single block,
+    # Pallas pads the lane dimension internally.
+    return D
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "d_block"))
+def gather_pool_pallas(
+    table: jax.Array,     # (R, D)
+    indices: jax.Array,   # (B, L) int32 — must be in [0, R)
+    weights: jax.Array,   # (B, L) f32 — 0 for masked/padded slots
+    *,
+    interpret: bool = False,
+    d_block: int | None = None,
+) -> jax.Array:
+    """Pooled lookup: ``out[b] = sum_l weights[b,l] * table[indices[b,l]]``.
+
+    Returns (B, D) f32 (accumulation dtype; callers cast).
+    """
+    R, D = table.shape
+    B, L = indices.shape
+    Db = d_block or _pick_d_block(D)
+    if D % Db != 0:
+        raise ValueError(f"D={D} not divisible by d_block={Db}")
+    nD = D // Db
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,
+        grid=(B, nD, L),
+        in_specs=[
+            # weights: one (1, L) row per sample, reused across d/l steps
+            pl.BlockSpec((1, L), lambda b, d, l, idx: (b, 0)),
+            # table: the (1, Db) block of the row named by the prefetched id
+            pl.BlockSpec((1, Db), lambda b, d, l, idx: (idx[b, l], d)),
+        ],
+        out_specs=pl.BlockSpec((1, Db), lambda b, d, l, idx: (b, d)),
+    )
+
+    return pl.pallas_call(
+        functools.partial(_gather_pool_kernel, L=L),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(indices, weights.astype(jnp.float32), table)

@@ -1,0 +1,107 @@
+"""Device-initiated one-sided all-to-all — the NVSHMEM analogue on TPU.
+
+The paper's NVSHMEM embedding bag issues fine-grained one-sided puts from
+inside the CUDA kernel, skipping host-launched collective scheduling —
+that is what wins at small message sizes (§3, Fig. 1). The TPU-native
+equivalent is a Pallas kernel issuing ``pltpu.make_async_remote_copy``
+RDMA over ICI, device-initiated, with semaphore completion — no XLA
+collective scheduling on the critical path.
+
+``onesided_all_to_all(x, axis_name)``: x (E, C, ...) sharded over an
+E-rank mesh axis; rank r's chunk x[d] lands in the output's row r on rank
+d — identical semantics to ``jax.lax.all_to_all(x, a, 0, 0)`` (verified
+against it in the tests via interpret mode, which models the remote DMA).
+
+Schedule: rank r sends to peers in the rotated order (r+1, r+2, ... r+E)
+so no destination is hot at any step; all E puts are started back-to-back
+(non-blocking, the put_nbi model) before any completion wait. The paper's
+reduce-scatter workaround (NVSHMEM 2.9 had no reduce-scatter primitive:
+a2a then local sum, §4.4) is ``onesided_reduce_scatter``.
+
+Call INSIDE shard_map over ``axis_name``. On CPU test runs pass
+``interpret=True``; on a real TPU slice the same kernel lowers to Mosaic
+RDMA. ``core/comm.py`` routes backend="onesided" here when enabled.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _a2a_kernel(x_ref, o_ref, send_sem, recv_sem, *, axis_name: str,
+                num_ranks: int):
+    my_id = jax.lax.axis_index(axis_name)
+    copies = []
+    for i in range(num_ranks):
+        dst = jax.lax.rem(my_id + i + 1, num_ranks)   # rotated schedule
+        copies.append(pltpu.make_async_remote_copy(
+            src_ref=x_ref.at[dst],
+            dst_ref=o_ref.at[my_id],
+            send_sem=send_sem,
+            recv_sem=recv_sem,
+            device_id=dst,
+            device_id_type=pltpu.DeviceIdType.LOGICAL,
+        ))
+    for c in copies:                                  # put_nbi: start all
+        c.start()
+    for c in copies:                                  # then complete
+        c.wait()
+
+
+def onesided_all_to_all(x: jax.Array, axis_name: str, *,
+                        interpret: bool = False) -> jax.Array:
+    """x (E, C, ...) -> (E, C, ...): out[i] on rank j == x[j] from rank i.
+
+    Must run inside shard_map over ``axis_name`` whose size == x.shape[0].
+    """
+    num_ranks = x.shape[0]
+    return pl.pallas_call(
+        functools.partial(_a2a_kernel, axis_name=axis_name,
+                          num_ranks=num_ranks),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
+        compiler_params=pltpu.CompilerParams(
+            collective_id=7,
+            has_side_effects=True,
+        ),
+        interpret=interpret,
+    )(x)
+
+
+def onesided_reduce_scatter(x: jax.Array, axis_name: str, *,
+                            interpret: bool = False) -> jax.Array:
+    """Paper §4.4 workaround: one-sided a2a + local sum.
+
+    x (E, M, ...) -> (M, ...) = sum over source ranks of x_src[my_rank].
+    """
+    exchanged = onesided_all_to_all(x, axis_name, interpret=interpret)
+    return exchanged.sum(axis=0)
+
+
+def onesided_ring_permute(x: jax.Array, axis_name: str, *, shift: int = 1,
+                          interpret: bool = False) -> jax.Array:
+    """One-sided ring shift (building block for pipelined schedules)."""
+
+    def kernel(x_ref, o_ref, send_sem, recv_sem):
+        my_id = jax.lax.axis_index(axis_name)
+        n = jax.lax.axis_size(axis_name)
+        dst = jax.lax.rem(my_id + shift, n)
+        copy = pltpu.make_async_remote_copy(
+            src_ref=x_ref, dst_ref=o_ref, send_sem=send_sem,
+            recv_sem=recv_sem, device_id=dst,
+            device_id_type=pltpu.DeviceIdType.LOGICAL)
+        copy.start()
+        copy.wait()
+
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+        scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
+        compiler_params=pltpu.CompilerParams(
+            collective_id=8, has_side_effects=True),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,128 @@
+"""Public kernel ops: backend dispatch + differentiability.
+
+``embedding_bag(...)`` is the single entry point used by the rest of the
+framework. ``mode`` selects:
+
+  * "reference" — pure-jnp oracle (ref.py). Default on CPU and for the
+    512-device dry-run (TPU Pallas primitives must not be traced there).
+  * "pallas"    — the TPU kernel (embedding_gather.py).
+  * "interpret" — the TPU kernel executed by the Pallas interpreter on CPU
+    (correctness validation path used by the test suite).
+  * "auto"      — "pallas" on TPU backends, else "reference".
+
+The Pallas forward is wrapped in a ``custom_vjp`` whose backward is the
+XLA scatter-add (segment-sum) — gathers' transpose — so the kernel path is
+trainable (needed for the LM vocab-embedding integration).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref as _ref
+from repro.kernels.embedding_gather import gather_pool_pallas
+
+
+def _resolve_mode(mode: str) -> str:
+    if mode != "auto":
+        return mode
+    return "pallas" if jax.default_backend() == "tpu" else "reference"
+
+
+def _effective_weights(indices, lengths, weights):
+    B, L = indices.shape
+    if lengths is None:
+        mask = jnp.ones((B, L), jnp.float32)
+    else:
+        mask = (jnp.arange(L)[None, :] < lengths[:, None]).astype(jnp.float32)
+    if weights is not None:
+        mask = mask * weights.astype(jnp.float32)
+    return mask
+
+
+# --- differentiable pallas path --------------------------------------------
+
+@jax.custom_vjp
+def _pooled_lookup_pallas(table, indices, eff_w, interpret):
+    return gather_pool_pallas(table, indices, eff_w, interpret=interpret)
+
+
+def _pooled_fwd(table, indices, eff_w, interpret):
+    out = gather_pool_pallas(table, indices, eff_w, interpret=interpret)
+    return out, (table, indices, eff_w)
+
+
+def _pooled_bwd(res, g):
+    table, indices, eff_w = res
+    R, D = table.shape
+    # d table[r] = sum_{b,l: idx==r} w[b,l] * g[b]  — scatter-add (gather^T)
+    flat_idx = indices.reshape(-1)
+    contrib = (eff_w[..., None] * g[:, None, :]).reshape(-1, D)
+    d_table = jax.ops.segment_sum(contrib, flat_idx, num_segments=R)
+    # d eff_w[b,l] = <table[idx[b,l]], g[b]>
+    d_w = jnp.einsum("bld,bd->bl", table[indices].astype(jnp.float32), g)
+    return d_table.astype(table.dtype), None, d_w, None
+
+
+_pooled_lookup_pallas.defvjp(_pooled_fwd, _pooled_bwd)
+
+
+# --- public API --------------------------------------------------------------
+
+def embedding_bag(
+    table: jax.Array,
+    indices: jax.Array,
+    lengths: Optional[jax.Array] = None,
+    weights: Optional[jax.Array] = None,
+    *,
+    combiner: str = "sum",
+    mode: str = "auto",
+) -> jax.Array:
+    """Pooled embedding lookup, ``(R, D) x (B, L) -> (B, D)``."""
+    mode = _resolve_mode(mode)
+    if mode == "reference":
+        return _ref.embedding_bag_ref(
+            table, indices, lengths, weights, combiner=combiner
+        )
+    if mode not in ("pallas", "interpret"):
+        raise ValueError(f"unknown mode {mode!r}")
+    eff_w = _effective_weights(indices, lengths, weights)
+    out = _pooled_lookup_pallas(table, indices, eff_w, mode == "interpret")
+    if combiner == "mean":
+        denom = jnp.maximum(eff_w.sum(axis=1, keepdims=True), 1.0)
+        out = out / denom
+    elif combiner != "sum":
+        raise ValueError(f"unknown combiner {combiner!r}")
+    return out.astype(table.dtype)
+
+
+def embedding_bag_rw_partial(
+    table_shard: jax.Array,
+    row_offset,
+    indices: jax.Array,
+    lengths: Optional[jax.Array] = None,
+    weights: Optional[jax.Array] = None,
+    *,
+    mode: str = "auto",
+) -> jax.Array:
+    """Row-wise-parallel partial pool (paper §4.2 phase 2).
+
+    ``indices`` are GLOBAL ids; rows outside ``[row_offset, row_offset+R)``
+    contribute zero. Summing across shards (psum / reduce-scatter)
+    reconstructs the full pooled output. Out-of-shard lookups are remapped
+    to (row 0, weight 0) so the same gather kernel handles both paths.
+    """
+    mode = _resolve_mode(mode)
+    if mode == "reference":
+        return _ref.embedding_bag_masked_ref(
+            table_shard, row_offset, indices, lengths, weights
+        )
+    R = table_shard.shape[0]
+    local = indices - row_offset
+    owned = (local >= 0) & (local < R)
+    safe = jnp.where(owned, local, 0).astype(jnp.int32)
+    eff_w = _effective_weights(indices, lengths, weights) * owned.astype(jnp.float32)
+    out = _pooled_lookup_pallas(table_shard, safe, eff_w, mode == "interpret")
+    return out.astype(table_shard.dtype)

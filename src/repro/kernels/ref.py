@@ -1,0 +1,95 @@
+"""Pure-jnp oracles for every kernel in this package.
+
+These are the correctness references the Pallas kernels are swept against,
+and the fallback implementation used on non-TPU backends (including the
+512-device CPU dry-run, which must not trace TPU-only primitives).
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag_ref(
+    table: jax.Array,          # (R, D) embedding table (or shard)
+    indices: jax.Array,        # (B, L) int32 row ids
+    lengths: Optional[jax.Array] = None,   # (B,) valid counts; None => all valid
+    weights: Optional[jax.Array] = None,   # (B, L) per-lookup weights
+    *,
+    combiner: str = "sum",
+) -> jax.Array:
+    """Gather + pool: ``out[b] = combine_l table[indices[b, l]]``.
+
+    Padding slots (l >= lengths[b]) contribute zero. ``combiner`` is "sum"
+    or "mean" (mean divides by lengths, guarding 0).
+    Returns (B, D) in the table dtype's accumulation type (f32 accum).
+    """
+    B, L = indices.shape
+    rows = table[indices]                                    # (B, L, D)
+    if lengths is None:
+        mask = jnp.ones((B, L), dtype=jnp.float32)
+    else:
+        mask = (jnp.arange(L)[None, :] < lengths[:, None]).astype(jnp.float32)
+    w = mask if weights is None else mask * weights.astype(jnp.float32)
+    out = jnp.einsum(
+        "bld,bl->bd", rows.astype(jnp.float32), w, precision=jax.lax.Precision.HIGHEST
+    )
+    if combiner == "mean":
+        denom = jnp.maximum(w.sum(axis=1, keepdims=True), 1.0)
+        out = out / denom
+    elif combiner != "sum":
+        raise ValueError(f"unknown combiner {combiner!r}")
+    return out.astype(table.dtype)
+
+
+def embedding_bag_masked_ref(
+    table_shard: jax.Array,    # (R_shard, D) this device's rows
+    row_offset,                # scalar int — first global row id of the shard
+    indices: jax.Array,        # (B, L) GLOBAL row ids
+    lengths: Optional[jax.Array] = None,
+    weights: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Row-wise-parallel partial pool: only rows owned by this shard count.
+
+    This is the per-device compute of the paper's RW pipeline: out-of-shard
+    indices pool to zero; summing the result across shards (reduce-scatter /
+    psum) reconstructs the full embedding bag.
+    """
+    R = table_shard.shape[0]
+    local = indices - row_offset
+    owned = (local >= 0) & (local < R)
+    safe = jnp.where(owned, local, 0)
+    B, L = indices.shape
+    if lengths is None:
+        mask = jnp.ones((B, L), dtype=jnp.float32)
+    else:
+        mask = (jnp.arange(L)[None, :] < lengths[:, None]).astype(jnp.float32)
+    w = mask * owned.astype(jnp.float32)
+    if weights is not None:
+        w = w * weights.astype(jnp.float32)
+    rows = table_shard[safe]                                 # (B, L, D)
+    out = jnp.einsum(
+        "bld,bl->bd", rows.astype(jnp.float32), w, precision=jax.lax.Precision.HIGHEST
+    )
+    return out.astype(table_shard.dtype)
+
+
+def embedding_onehot_ref(
+    table: jax.Array,          # (R, D)
+    indices: jax.Array,        # (B, L)
+    lengths: Optional[jax.Array] = None,
+) -> jax.Array:
+    """One-hot-matmul formulation (MXU-friendly alternative for tiny R).
+
+    out = onehot(indices) @ table, summed over L. Used to cross-check the
+    gather formulation and as the R-small fast path.
+    """
+    B, L = indices.shape
+    R = table.shape[0]
+    oh = jax.nn.one_hot(indices, R, dtype=table.dtype)       # (B, L, R)
+    if lengths is not None:
+        mask = (jnp.arange(L)[None, :] < lengths[:, None]).astype(table.dtype)
+        oh = oh * mask[:, :, None]
+    return jnp.einsum("blr,rd->bd", oh, table)

@@ -1,0 +1,94 @@
+"""Training launcher.
+
+    PYTHONPATH=src python -m repro.launch.train --arch yi-34b --smoke \
+        --steps 100 --batch 8 --seq 64 --ckpt-dir /tmp/run1
+
+``--smoke`` selects the reduced config (CPU-runnable); without it the full
+production config is used (requires a real TPU slice — on this container
+use the dry-run instead). With >1 local devices a (data, model) debug mesh
+is built automatically and the full distributed path (RW embedding, EP
+MoE, FSDP, sharded optimizer) is exercised.
+
+On a real multi-host slice, initialize with ``jax.distributed.initialize``
+(--coordinator) before the mesh is built; everything else is identical —
+this file IS the multi-pod launcher.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+
+import jax
+
+from repro import configs
+from repro.configs.base import TrainConfig
+from repro.core.parallel import make_context
+from repro.data import Prefetcher, lm_batches
+from repro.launch import specs as S
+from repro.launch.mesh import make_debug_mesh, make_production_mesh
+from repro.train.loop import Trainer
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=configs.ARCH_IDS)
+    ap.add_argument("--smoke", action="store_true")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--opt-state-dtype", default="float32")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="use the 256/512-chip mesh (real slice only)")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--coordinator", default=None,
+                    help="host:port for jax.distributed.initialize")
+    ap.add_argument("--metrics-out", default=None)
+    args = ap.parse_args(argv)
+
+    if args.coordinator:
+        jax.distributed.initialize(coordinator_address=args.coordinator)
+
+    cfg = (configs.get_smoke_config(args.arch) if args.smoke
+           else configs.get_config(args.arch))
+    tc = TrainConfig(learning_rate=args.lr, total_steps=args.steps,
+                     warmup_steps=max(1, args.steps // 10),
+                     grad_accum=args.grad_accum,
+                     optimizer_state_dtype=args.opt_state_dtype,
+                     checkpoint_every=args.ckpt_every)
+
+    n_dev = len(jax.devices())
+    ctx = None
+    state_shardings = None
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        ctx = make_context(mesh)
+    elif n_dev > 1:
+        mesh = make_debug_mesh(n_dev)
+        ctx = make_context(mesh)
+    if ctx is not None:
+        _, st_specs = S.state_spec_tree(cfg, tc, ctx)
+        state_shardings = jax.tree.map(ctx.sharding, st_specs)
+
+    data = Prefetcher(lm_batches(cfg, args.batch, args.seq, seed=tc.seed))
+    trainer = Trainer(cfg, tc, data, ckpt_dir=args.ckpt_dir, ctx=ctx,
+                      state_shardings=state_shardings)
+
+    def log(step, m):
+        print(f"step {step:5d}  loss {m['loss']:.4f}  "
+              f"gnorm {m['grad_norm']:.3f}  {m['step_time_s']*1e3:.0f} ms")
+
+    trainer.run(args.steps, on_metrics=log)
+    data.close()
+    if args.metrics_out:
+        with open(args.metrics_out, "w") as f:
+            json.dump(trainer.metrics_log, f)
+    print(f"done: {trainer.start_step} steps, "
+          f"stragglers observed: {trainer.straggler_events}")
+
+
+if __name__ == "__main__":
+    main()

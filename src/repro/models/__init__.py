@@ -1,0 +1,1 @@
+"""Model zoo: unified LM (all 10 assigned archs) + DLRM (the paper's model)."""

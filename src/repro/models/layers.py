@@ -1,0 +1,296 @@
+"""Shared neural-net building blocks (pure JAX, explicit param pytrees).
+
+No flax/optax in this environment: parameters are nested dicts of arrays,
+every module is an ``init_*``/``apply`` function pair. Conventions:
+
+  * activations   (B, S, D) unless stated
+  * attention     q (B, S, H, hd), kv (B, S, KH, hd), GQA via head groups
+  * stacked layers: leading ``(num_layers, ...)`` axis, consumed by
+    ``jax.lax.scan`` so the HLO stays one-layer-sized (this is what keeps
+    the 512-device dry-run compile tractable on one CPU core)
+  * long sequences: ``chunked_attention`` — an online-softmax blockwise
+    attention (the pure-jnp oracle of the Pallas flash kernel) that never
+    materializes the (S, S) score matrix
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Param init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, in_dim: int, out_dim: int, *, scale: Optional[float] = None,
+               dtype=jnp.float32):
+    """(in, out) matrix, truncated-normal fan-in init."""
+    scale = scale if scale is not None else in_dim ** -0.5
+    return (jax.random.truncated_normal(rng, -2.0, 2.0, (in_dim, out_dim)) *
+            scale).astype(dtype)
+
+
+def stacked_dense_init(rng, n: int, in_dim: int, out_dim: int, **kw):
+    return jax.vmap(lambda r: dense_init(r, in_dim, out_dim, **kw))(
+        jax.random.split(rng, n)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+def rms_norm(x, weight, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return (x * jax.lax.rsqrt(var + eps) * weight.astype(jnp.float32)).astype(dt)
+
+
+def layer_norm(x, weight, bias, eps: float = 1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) ** 2, axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * weight.astype(jnp.float32) + bias.astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# Activations
+# ---------------------------------------------------------------------------
+
+def activation_fn(name: str):
+    return {
+        "silu": jax.nn.silu,
+        "gelu": partial(jax.nn.gelu, approximate=True),
+        "relu": jax.nn.relu,
+        # Nemotron-4: squared ReLU
+        "relu2": lambda x: jnp.square(jax.nn.relu(x)),
+    }[name]
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float = 10000.0):
+    """(head_dim/2,) inverse frequencies."""
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x, positions, *, theta: float = 10000.0):
+    """Rotate pairs (even, odd interleave as half-split). x: (..., S, H, hd)."""
+    hd = x.shape[-1]
+    inv = rope_freqs(hd, theta)                            # (hd/2,)
+    ang = positions[..., :, None].astype(jnp.float32) * inv  # (..., S, hd/2)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    cos = cos[..., :, None, :]                             # (..., S, 1, hd/2)
+    sin = sin[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention — full (short-seq) and chunked online-softmax (long-seq oracle)
+# ---------------------------------------------------------------------------
+
+def _expand_kv(k, H: int):
+    """(B, S, KH, hd) -> (B, S, H, hd) by repeating groups (GQA)."""
+    B, S, KH, hd = k.shape
+    if KH == H:
+        return k
+    return jnp.repeat(k, H // KH, axis=2)
+
+
+def full_attention(q, k, v, *, causal: bool = True, window: Optional[int] = None,
+                   q_offset: int = 0, scale: Optional[float] = None):
+    """Naive (S_q, S_k) attention — reference path for short sequences.
+
+    ``q_offset``: absolute position of q[0] relative to k[0] (decode: S_k-1).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    k = _expand_kv(k, H)
+    v = _expand_kv(v, H)
+    scale = scale if scale is not None else hd ** -0.5
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    qpos = jnp.arange(Sq) + q_offset
+    kpos = jnp.arange(Sk)
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= kpos[None, :] <= qpos[:, None]
+    if window is not None:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v.astype(jnp.float32))
+    return out.astype(q.dtype)
+
+
+def chunked_attention(q, k, v, *, causal: bool = True,
+                      window: Optional[int] = None,
+                      q_block: int = 1024, kv_block: int = 1024,
+                      scale: Optional[float] = None,
+                      skip_masked_blocks: bool = True):
+    """Blockwise online-softmax attention: never materializes (S, S).
+
+    Oracle for kernels/flash_attention.py. Scans KV blocks per Q block,
+    carrying (m, l, acc). ``skip_masked_blocks``: with causal masking, KV
+    blocks strictly above the diagonal contribute nothing; the scan still
+    visits them unless this flag trims the *fully*-masked tail by bounding
+    the scan with a wedge iteration (saves ~2x FLOPs at long S).
+    """
+    B, S, H, hd = q.shape
+    KH = k.shape[2]
+    hd_v = v.shape[3]        # may differ from hd (MLA: k 192, v 128)
+    G = H // KH
+    scale = scale if scale is not None else hd ** -0.5
+    qb = min(q_block, S)
+    kb = min(kv_block, S)
+    # pad to block multiples
+    Sq_p = -(-S // qb) * qb
+    Sk_p = -(-S // kb) * kb
+    qp = jnp.pad(q, ((0, 0), (0, Sq_p - S), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, Sk_p - S), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, Sk_p - S), (0, 0), (0, 0)))
+    nQ, nK = Sq_p // qb, Sk_p // kb
+
+    qblk = qp.reshape(B, nQ, qb, KH, G, hd).astype(jnp.float32)
+    kblk = kp.reshape(B, nK, kb, KH, hd).astype(jnp.float32)
+    vblk = vp.reshape(B, nK, kb, KH, hd_v).astype(jnp.float32)
+
+    kpos = jnp.arange(Sk_p).reshape(nK, kb)
+
+    def per_qblock(qi, qtile):                     # qtile (B, qb, KH, G, hd)
+        qpos = qi * qb + jnp.arange(qb)
+
+        def body(carry, inputs):
+            m, l, acc = carry
+            ki, kt, vt = inputs                    # kt/vt (B, kb, KH, hd)
+            s = jnp.einsum("bqkgd,bskd->bkgqs", qtile, kt) * scale
+            valid = kpos[ki][None, :] < S          # mask padded keys
+            msk = valid
+            if causal:
+                msk = msk & (kpos[ki][None, :] <= qpos[:, None])
+            if window is not None:
+                msk = msk & (kpos[ki][None, :] > qpos[:, None] - window)
+            s = jnp.where(msk[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            acc_new = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskd->bkgqd", p, vt)
+            if causal and skip_masked_blocks:
+                # wedge trim: blocks fully above the diagonal are no-ops;
+                # keep old carry (lets XLA elide the dead compute per step)
+                live = (ki * kb) <= (qi * qb + qb - 1)
+                m_new = jnp.where(live, m_new, m)
+                l_new = jnp.where(live, l_new, l)
+                acc_new = jnp.where(live, acc_new, acc)
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, KH, G, qb), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, KH, G, qb), jnp.float32)
+        a0 = jnp.zeros((B, KH, G, qb, hd_v), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            body, (m0, l0, a0),
+            (jnp.arange(nK), kblk.swapaxes(0, 1), vblk.swapaxes(0, 1)))
+        out = acc / jnp.maximum(l, 1e-30)[..., None]       # (B, KH, G, qb, hd)
+        return out.transpose(0, 3, 1, 2, 4)                # (B, qb, KH, G, hd)
+
+    # vmap (NOT lax.map/scan) over q blocks: the q-block axis is data-
+    # parallel, and under GSPMD a scan over a sharded axis forces a gather
+    # per step (observed: replicated attention on seq-sharded carries).
+    # vmap leaves the axis free to stay sequence-sharded over the mesh.
+    outs = jax.vmap(per_qblock, in_axes=(0, 1), out_axes=0)(
+        jnp.arange(nQ), qblk)                       # (nQ, B, qb, KH, G, hd_v)
+    out = outs.transpose(1, 0, 2, 3, 4, 5).reshape(B, Sq_p, H, hd_v)
+    return out[:, :S].astype(q.dtype)
+
+
+def attention(q, k, v, *, causal=True, window=None, q_offset: int = 0,
+              scale=None, chunk_threshold: int = 8192):
+    """Dispatch: full attention for short S, chunked online-softmax beyond."""
+    Sk = k.shape[1]
+    if Sk <= chunk_threshold or q.shape[1] != Sk:
+        return full_attention(q, k, v, causal=causal, window=window,
+                              q_offset=q_offset, scale=scale)
+    return chunked_attention(q, k, v, causal=causal, window=window, scale=scale)
+
+
+# ---------------------------------------------------------------------------
+# Decode attention with sequence-sharded KV (flash-decode combine)
+# ---------------------------------------------------------------------------
+
+def decode_attention_partial(q, k_cache, v_cache, length, *, scale=None,
+                             window: Optional[int] = None, kv_offset=0):
+    """One-token attention over a (possibly sequence-sharded) KV cache slice.
+
+    q: (B, 1, H, hd); caches: (B, Sc, KH, hd) — this shard's slice whose
+    absolute positions start at ``kv_offset``; ``length`` = total valid
+    context length (tokens at absolute pos >= length are masked).
+
+    Returns (o, m, l): the *partial* flash-decode triple. Combining shards:
+        m* = max(m_i);  l* = sum(l_i * exp(m_i - m*));
+        o* = sum(o_i * l_i * exp(m_i - m*)) / l*
+    (see ``combine_decode_partials``). For an unsharded cache the triple
+    reduces to plain attention via the same combine with one element.
+    """
+    B, _, H, hd = q.shape
+    Sc, KH = k_cache.shape[1], k_cache.shape[2]
+    scale = scale if scale is not None else hd ** -0.5
+    k = _expand_kv(k_cache, H).astype(jnp.float32)
+    v = _expand_kv(v_cache, H).astype(jnp.float32)
+    s = jnp.einsum("bqhd,bkhd->bhk", q.astype(jnp.float32), k) * scale  # (B,H,Sc)
+    pos = kv_offset + jnp.arange(Sc)
+    valid = pos[None, :] < length if jnp.ndim(length) else pos < length
+    if window is not None:
+        valid = valid & (pos[None, :] >= length - window)
+    s = jnp.where(jnp.broadcast_to(valid, (B, Sc))[:, None, :], s, -1e30)
+    m = s.max(axis=-1)                                     # (B, H)
+    p = jnp.exp(s - m[..., None])
+    l = p.sum(axis=-1)                                     # (B, H)
+    o = jnp.einsum("bhk,bkhd->bhd", p, v)                  # (B, H, hd) unnorm.
+    return o, m, l
+
+
+def combine_decode_partials(o, m, l, axis_name: Optional[str] = None):
+    """Combine flash-decode partials, optionally across a mesh axis."""
+    if axis_name is not None:
+        m_star = jax.lax.pmax(m, axis_name)
+        corr = jnp.exp(m - m_star) * l
+        l_star = jax.lax.psum(corr, axis_name)
+        o_star = jax.lax.psum(o * jnp.exp(m - m_star)[..., None], axis_name)
+        return o_star / jnp.maximum(l_star, 1e-30)[..., None]
+    return o / jnp.maximum(l, 1e-30)[..., None]
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+def init_ffn(rng, n: int, d: int, d_ff: int, *, gated: bool = True, dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    p = {"up": stacked_dense_init(ks[0], n, d, d_ff, dtype=dtype),
+         "down": stacked_dense_init(ks[1], n, d_ff, d, dtype=dtype)}
+    if gated:
+        p["gate"] = stacked_dense_init(ks[2], n, d, d_ff, dtype=dtype)
+    return p
+
+
+def apply_ffn(p, x, act: str):
+    h = x @ p["up"]
+    if "gate" in p:
+        h = activation_fn(act)(x @ p["gate"]) * h
+    else:
+        h = activation_fn(act)(h)
+    return h @ p["down"]

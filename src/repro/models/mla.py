@@ -1,0 +1,152 @@
+"""Multi-head Latent Attention (DeepSeek-V3) — train, prefill, and
+absorbed flash-decode paths.
+
+The KV cache stores only the compressed latent (c_kv, k_rope) per token
+(kv_lora + rope dims ≈ 576 floats vs 2*H*hd = 32768 for vanilla MHA at
+deepseek scale) — this is why deepseek decode stays memory-feasible at 32k
+context. Decode uses the *absorbed* formulation: scores and context are
+computed in the latent space; the up-projections w_uk/w_uv are folded into
+the query/output transforms, so per-step FLOPs do not scale with H*hd*S.
+
+The decode partial returns a flash-decode (o, m, l) triple in latent space
+so a sequence-sharded cache combines across the mesh axis exactly like GQA
+(models/layers.combine_decode_partials).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MLAConfig, ModelConfig
+from repro.models import layers
+
+
+def init_mla_params(rng, n: int, cfg: ModelConfig, dtype=jnp.float32):
+    m: MLAConfig = cfg.mla
+    d, H = cfg.d_model, cfg.num_heads
+    qk = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(rng, 8)
+
+    def stack(k, shape, fan_in):
+        return (jax.random.truncated_normal(k, -2.0, 2.0, (n,) + shape)
+                * fan_in ** -0.5).astype(dtype)
+
+    return {
+        "w_dq": stack(ks[0], (d, m.q_lora_rank), d),
+        "q_norm": jnp.ones((n, m.q_lora_rank), dtype),
+        "w_uq": stack(ks[1], (m.q_lora_rank, H * qk), m.q_lora_rank),
+        "w_dkv": stack(ks[2], (d, m.kv_lora_rank + m.qk_rope_head_dim), d),
+        "kv_norm": jnp.ones((n, m.kv_lora_rank), dtype),
+        "w_uk": stack(ks[3], (m.kv_lora_rank, H, m.qk_nope_head_dim),
+                      m.kv_lora_rank),
+        "w_uv": stack(ks[4], (m.kv_lora_rank, H, m.v_head_dim),
+                      m.kv_lora_rank),
+        "w_o": stack(ks[5], (H * m.v_head_dim, d), H * m.v_head_dim),
+    }
+
+
+def _project_q(p, x, cfg: ModelConfig, positions):
+    """x (B,S,d) -> q_nope (B,S,H,nope), q_rope (B,S,H,rope)."""
+    m = cfg.mla
+    H = cfg.num_heads
+    cq = layers.rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    q = (cq @ p["w_uq"]).reshape(
+        x.shape[0], x.shape[1], H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope = q[..., : m.qk_nope_head_dim]
+    q_rope = layers.apply_rope(q[..., m.qk_nope_head_dim:], positions,
+                               theta=cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def latent_kv(p, x, cfg: ModelConfig, positions):
+    """x (B,S,d) -> (c_kv (B,S,kvr), k_rope (B,S,rope)) — the cache entry."""
+    m = cfg.mla
+    ckv = x @ p["w_dkv"]
+    c_kv = layers.rms_norm(ckv[..., : m.kv_lora_rank], p["kv_norm"],
+                           cfg.norm_eps)
+    k_rope = layers.apply_rope(ckv[..., None, m.kv_lora_rank:], positions,
+                               theta=cfg.rope_theta)[..., 0, :]
+    return c_kv, k_rope
+
+
+def mla_attention(p, x, positions, cfg: ModelConfig, *, causal=True):
+    """Full-sequence MLA (train / prefill). Returns (out (B,S,d), cache).
+
+    Short sequences compute scores as two einsums — q_nope.k_nope plus a
+    rope term that contracts the SHARED k_rope directly ("bqhr,bkr->bhqk")
+    instead of broadcasting it to all H heads: the broadcast's gradient is
+    an H-reduction that GSPMD materialized as a full (B,H,S,192)+
+    (B,H,192,S) all-reduce x layers (232 GiB/device on deepseek train_4k,
+    §Perf hc3). Long sequences keep the concat + blockwise path.
+    """
+    m = cfg.mla
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope = _project_q(p, x, cfg, positions)
+    c_kv, k_rope = latent_kv(p, x, cfg, positions)
+    k_nope = jnp.einsum("bsk,khn->bshn", c_kv, p["w_uk"])
+    v = jnp.einsum("bsk,khv->bshv", c_kv, p["w_uv"])
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    if S <= cfg.attn_chunk_threshold:
+        s = jnp.einsum("bqhn,bkhn->bhqk", q_nope.astype(jnp.float32),
+                       k_nope.astype(jnp.float32))
+        s = s + jnp.einsum("bqhr,bkr->bhqk", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))
+        s = s * scale
+        if causal:
+            qpos = jnp.arange(S)
+            s = jnp.where((qpos[None, :] <= qpos[:, None])[None, None],
+                          s, -1e30)
+        pr = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqk,bkhv->bqhv", pr, v.astype(jnp.float32))
+        o = o.astype(x.dtype)
+    else:
+        q = jnp.concatenate([q_nope, q_rope], axis=-1)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :],
+                                      (B, S, H, m.qk_rope_head_dim))],
+            axis=-1)
+        o = layers.attention(q, k, v, causal=causal, scale=scale,
+                             chunk_threshold=cfg.attn_chunk_threshold)
+    out = o.reshape(B, S, H * m.v_head_dim) @ p["w_o"]
+    return out, (c_kv, k_rope)
+
+
+def mla_decode_partial(p, x, cfg: ModelConfig, c_kv, k_rope, length,
+                       *, kv_offset=0):
+    """Absorbed one-token decode over a (possibly seq-sharded) latent cache.
+
+    x (B,1,d); c_kv (B,Sc,kvr); k_rope (B,Sc,rope). Returns the flash
+    triple (ctx (B,H,kvr) unnormalized, m (B,H), l (B,H)) — context stays
+    in LATENT space; expand with ``mla_decode_output`` after combining.
+    """
+    m = cfg.mla
+    H = cfg.num_heads
+    pos = length - 1                                      # query position
+    positions = jnp.broadcast_to(pos, (x.shape[0], 1))
+    q_nope, q_rope = _project_q(p, x, cfg, positions)     # (B,1,H,·)
+    q_abs = jnp.einsum("bqhn,khn->bqhk", q_nope, p["w_uk"])  # (B,1,H,kvr)
+    s = (jnp.einsum("bqhk,bsk->bhs", q_abs.astype(jnp.float32),
+                    c_kv.astype(jnp.float32)) +
+         jnp.einsum("bqhr,bsr->bhs", q_rope.astype(jnp.float32),
+                    k_rope.astype(jnp.float32)))
+    s = s * (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+    kpos = kv_offset + jnp.arange(c_kv.shape[1])
+    valid = kpos[None, :] < jnp.reshape(length, (-1, 1))
+    s = jnp.where(valid[:, None, :], s, -1e30)
+    mx = s.max(axis=-1)                                   # (B,H)
+    pr = jnp.exp(s - mx[..., None])
+    l = pr.sum(axis=-1)
+    ctx = jnp.einsum("bhs,bsk->bhk", pr, c_kv.astype(jnp.float32))
+    return ctx, mx, l
+
+
+def mla_decode_output(p, ctx, x_dtype):
+    """Latent context (B,H,kvr) -> output (B,1,d) through absorbed w_uv/w_o."""
+    H = ctx.shape[1]
+    v = jnp.einsum("bhk,khv->bhv", ctx, p["w_uv"].astype(jnp.float32))
+    B = ctx.shape[0]
+    return (v.reshape(B, 1, -1) @ p["w_o"].astype(jnp.float32)).astype(x_dtype)

@@ -1,0 +1,15 @@
+from repro.optim.adamw import (  # noqa: F401
+    adamw_init,
+    adamw_update,
+    cosine_schedule,
+    global_norm,
+)
+from repro.optim.quant import (  # noqa: F401
+    QuantizedTensor,
+    dequantize_blockwise,
+    quantize_blockwise,
+)
+from repro.optim.rowwise_adagrad import (  # noqa: F401
+    rowwise_adagrad_init,
+    rowwise_adagrad_update,
+)

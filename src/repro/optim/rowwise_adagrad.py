@@ -1,0 +1,28 @@
+"""Row-wise Adagrad — the industry-standard embedding-table optimizer.
+
+One accumulator scalar per embedding ROW (not per element): state is
+(T, R) for a (T, R, D) stacked table, a D-fold memory saving that matters
+when the tables are the model (DLRM). Used by TorchRec/FBGEMM for exactly
+the tables this paper shards; gradient sparsity (most rows untouched per
+step) is preserved because accumulators only grow where grads are nonzero.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def rowwise_adagrad_init(tables: jax.Array) -> jax.Array:
+    """tables (T, R, D) -> accumulator (T, R) f32."""
+    return jnp.zeros(tables.shape[:-1], jnp.float32)
+
+
+def rowwise_adagrad_update(tables, accum, grads, *, lr: float = 0.01,
+                           eps: float = 1e-8):
+    """One sparse-friendly update. grads (T, R, D) (zero for untouched rows)."""
+    g2 = jnp.mean(jnp.square(grads.astype(jnp.float32)), axis=-1)  # (T, R)
+    accum = accum + g2
+    scale = lr / (jnp.sqrt(accum) + eps)
+    new_tables = (tables.astype(jnp.float32) -
+                  scale[..., None] * grads.astype(jnp.float32))
+    return new_tables.astype(tables.dtype), accum

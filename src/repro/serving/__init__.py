@@ -1,0 +1,4 @@
+from repro.serving.engine import (  # noqa: F401
+    ContinuousBatcher,
+    generate,
+)

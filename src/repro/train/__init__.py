@@ -1,0 +1,5 @@
+from repro.train.step import (  # noqa: F401
+    init_train_state,
+    make_train_step,
+    softmax_xent_chunked,
+)

@@ -1,0 +1,114 @@
+"""Trainer: the fault-tolerant step loop.
+
+Responsibilities:
+  * build the jitted train_step with explicit in/out shardings,
+  * init-or-resume from the newest intact checkpoint (crash-safe store),
+  * periodic async checkpoints + SIGTERM/SIGINT preemption handler
+    (save-and-exit — the standard TPU-preemption contract),
+  * deterministic data (step-keyed) so a restarted run replays the exact
+    batch sequence: recovery is bitwise-reproducible (tested),
+  * step-time telemetry incl. a simple straggler monitor: steps slower
+    than ``straggler_factor`` x median are counted and logged (on real
+    multi-host deployments this is the signal that triggers hot-spare
+    swap / data re-sharding; on one host it degrades to timing noise).
+"""
+from __future__ import annotations
+
+import signal
+import time
+from typing import Any, Callable, Dict, Iterator, Optional
+
+import jax
+import numpy as np
+
+from repro import checkpoint as ckpt
+from repro.configs.base import ModelConfig, TrainConfig
+from repro.core.parallel import ParallelContext
+from repro.train.step import init_train_state, make_train_step
+
+
+class Trainer:
+    def __init__(self, cfg: ModelConfig, tc: TrainConfig,
+                 data: Iterator[Dict[str, np.ndarray]],
+                 ckpt_dir: Optional[str] = None,
+                 ctx: Optional[ParallelContext] = None,
+                 state_shardings: Optional[Any] = None,
+                 dtype=None):
+        self.cfg, self.tc, self.ctx = cfg, tc, ctx
+        self.data = data
+        self.ckpt_dir = ckpt_dir
+        self.metrics_log: list = []
+        self._preempted = False
+        self._step_times: list = []
+        self.straggler_factor = 3.0
+        self.straggler_events = 0
+
+        step_fn = make_train_step(cfg, tc, ctx)
+        if ctx is not None and state_shardings is not None:
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0,),
+                                   out_shardings=(state_shardings, None))
+        else:
+            self.step_fn = jax.jit(step_fn, donate_argnums=(0,))
+
+        tp = ctx.tp_size if ctx is not None else 1
+        template = init_train_state(
+            jax.random.key(tc.seed), cfg, tc, tp_size=tp, dtype=dtype)
+        start = ckpt.latest_step(ckpt_dir) if ckpt_dir else None
+        if start is not None:
+            self.state = ckpt.restore(template, ckpt_dir, start,
+                                      shardings=state_shardings)
+            self.start_step = start
+        else:
+            self.state = (jax.device_put(template, state_shardings)
+                          if state_shardings is not None else template)
+            self.start_step = 0
+
+    # ------------------------------------------------------------------
+    def _install_preemption_handler(self):
+        def handler(signum, frame):
+            self._preempted = True
+        self._old = {s: signal.signal(s, handler)
+                     for s in (signal.SIGTERM, signal.SIGINT)}
+
+    def _restore_handlers(self):
+        for s, h in getattr(self, "_old", {}).items():
+            signal.signal(s, h)
+
+    def _checkpoint(self, step: int, asynchronous: bool = True):
+        if self.ckpt_dir:
+            ckpt.save(self.state, self.ckpt_dir, step,
+                      asynchronous=asynchronous, keep=self.tc.keep_checkpoints)
+
+    # ------------------------------------------------------------------
+    def run(self, num_steps: int,
+            on_metrics: Optional[Callable[[int, Dict], None]] = None):
+        """Run ``num_steps`` (or until preemption). Returns final state."""
+        self._install_preemption_handler()
+        try:
+            step = self.start_step
+            end = self.start_step + num_steps
+            while step < end and not self._preempted:
+                batch = next(self.data)
+                t0 = time.perf_counter()
+                self.state, metrics = self.step_fn(self.state, batch)
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self._step_times.append(dt)
+                med = float(np.median(self._step_times[-50:]))
+                if len(self._step_times) > 5 and dt > self.straggler_factor * med:
+                    self.straggler_events += 1
+                step += 1
+                m = {k: float(v) for k, v in metrics.items()}
+                m["step_time_s"] = dt
+                self.metrics_log.append((step, m))
+                if on_metrics:
+                    on_metrics(step, m)
+                if step % self.tc.checkpoint_every == 0:
+                    self._checkpoint(step)
+            # final (or preemption) checkpoint is synchronous: must land
+            ckpt.wait_all()           # async writers first (ordering)
+            self._checkpoint(step, asynchronous=False)
+            self.start_step = step
+            return self.state
+        finally:
+            self._restore_handlers()

@@ -1,0 +1,92 @@
+"""Checkpoint store: atomicity, round-trips, GC, quantized state."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import checkpoint as ckpt
+from repro.optim.quant import quantize_blockwise
+
+
+def _tree():
+    return {
+        "a": jnp.arange(12, dtype=jnp.float32).reshape(3, 4),
+        "nested": {"b": jnp.ones((2,), jnp.bfloat16),
+                   "step": jnp.asarray(7, jnp.int32)},
+    }
+
+
+def test_save_restore_roundtrip():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(t, d, 3)
+        assert ckpt.latest_step(d) == 3
+        r = ckpt.restore(t, d)
+        for a, b in zip(jax.tree.leaves(t), jax.tree.leaves(r)):
+            np.testing.assert_array_equal(np.asarray(a, np.float32),
+                                          np.asarray(b, np.float32))
+            assert a.dtype == b.dtype
+
+
+def test_quantized_state_roundtrip():
+    t = {"m": quantize_blockwise(jnp.linspace(-2, 2, 300))}
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(t, d, 0)
+        r = ckpt.restore(t, d)
+        np.testing.assert_array_equal(np.asarray(t["m"].q),
+                                      np.asarray(r["m"].q))
+        np.testing.assert_array_equal(np.asarray(t["m"].scale),
+                                      np.asarray(r["m"].scale))
+
+
+def test_gc_keeps_newest():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        for s in range(6):
+            ckpt.save(t, d, s, keep=2)
+        steps = sorted(int(n.split("_")[1]) for n in os.listdir(d))
+        assert steps == [4, 5]
+
+
+def test_no_tmp_dirs_left():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(t, d, 0)
+        ckpt.save(t, d, 1, asynchronous=True)
+        ckpt.wait_all()
+        assert not [n for n in os.listdir(d) if ".tmp" in n]
+
+
+def test_restore_rejects_shape_mismatch():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(t, d, 0)
+        bad = dict(t, a=jnp.zeros((2, 2)))
+        with pytest.raises(ValueError):
+            ckpt.restore(bad, d)
+
+
+def test_restore_rejects_tree_mismatch():
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(t, d, 0)
+        bad = {"a": t["a"], "nested": {"c": t["nested"]["b"],
+                                       "step": t["nested"]["step"]}}
+        with pytest.raises(ValueError):
+            ckpt.restore(bad, d)
+
+
+def test_elastic_restore_with_shardings():
+    """Restore onto an explicit sharding (single-device here, the same
+    device_put path a different mesh would take)."""
+    t = _tree()
+    with tempfile.TemporaryDirectory() as d:
+        ckpt.save(t, d, 0)
+        sh = jax.tree.map(
+            lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]), t)
+        r = ckpt.restore(t, d, shardings=sh)
+        assert r["a"].sharding == jax.sharding.SingleDeviceSharding(
+            jax.devices()[0])

@@ -1,0 +1,22 @@
+"""Multi-device integration — runs tests/_dist_checks.py in a subprocess
+with an 8-device CPU backend (XLA_FLAGS must be set before jax import,
+and the rest of the suite must keep the real single device)."""
+import os
+import subprocess
+import sys
+
+import pytest
+
+
+@pytest.mark.timeout(900)
+def test_distributed_suite():
+    script = os.path.join(os.path.dirname(__file__), "_dist_checks.py")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    proc = subprocess.run(
+        [sys.executable, script], env=env, capture_output=True, text=True,
+        timeout=880)
+    sys.stdout.write(proc.stdout[-4000:])
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "distributed checks failed"

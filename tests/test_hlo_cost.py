@@ -1,0 +1,64 @@
+"""hlo_cost: trip-count-weighted HLO accounting vs unrolled ground truth."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_cost
+
+
+def _compile(f, *args):
+    return jax.jit(f).lower(*args).compile()
+
+
+def test_scan_flops_match_unrolled():
+    def f(x, w, unroll):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        c, _ = jax.lax.scan(body, x, w, unroll=unroll)
+        return c
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    w = jax.ShapeDtypeStruct((8, 256, 256), jnp.float32)
+    scanned = _compile(lambda a, b: f(a, b, 1), x, w)
+    unrolled = _compile(lambda a, b: f(a, b, 8), x, w)
+    got = hlo_cost.analyze(scanned.as_text())["flops_per_device"]
+    want = unrolled.cost_analysis()["flops"]
+    assert got == want == 8 * 2 * 128 * 256 * 256
+
+
+def test_nested_scan():
+    def g(x, w):
+        def outer(c, wi):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ wi), None
+            c2, _ = jax.lax.scan(inner, c, None, length=3)
+            return c2, None
+        c, _ = jax.lax.scan(outer, x, w)
+        return c
+
+    x = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    w = jax.ShapeDtypeStruct((4, 128, 128), jnp.float32)
+    co = _compile(g, x, w)
+    r = hlo_cost.analyze(co.as_text())
+    assert r["flops_per_device"] == 12 * 2 * 64 * 128 * 128
+    assert not r["has_unknown_trip_counts"]
+
+
+def test_no_scan_matches_cost_analysis():
+    def f(a, b):
+        return (a @ b).sum()
+
+    a = jax.ShapeDtypeStruct((256, 512), jnp.float32)
+    b = jax.ShapeDtypeStruct((512, 128), jnp.float32)
+    co = _compile(f, a, b)
+    r = hlo_cost.analyze(co.as_text())
+    xla = co.cost_analysis()["flops"]
+    # dots only — allow small elementwise slack
+    assert abs(r["flops_per_device"] - xla) / xla < 0.05
+
+
+def test_shape_bytes_parsing():
+    assert hlo_cost._bytes_of("f32[128,256]{1,0}") == 128 * 256 * 4
+    assert hlo_cost._bytes_of("bf16[8]{0}") == 16
+    assert hlo_cost._bytes_of("(s32[], f32[4,4]{1,0})") == 64  # last shape
+    assert hlo_cost._bytes_of("pred[]") == 1

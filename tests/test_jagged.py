@@ -1,0 +1,70 @@
+"""Jagged batch (paper's indices/lengths format) — unit + property tests."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.jagged import (
+    JaggedBatch,
+    csr_to_padded,
+    offsets_from_lengths,
+    padded_to_csr,
+    random_jagged_batch,
+)
+
+
+def test_csr_roundtrip_example():
+    # the paper's §4.2 example
+    indices = np.array([14, 29, 12, 6, 13, 10, 8, 2])
+    lengths = np.array([2, 1, 0, 3, 2])
+    padded, lens = csr_to_padded(indices, lengths)
+    assert padded.shape == (5, 3)
+    assert list(padded[0, :2]) == [14, 29]
+    assert list(padded[1, :1]) == [12]
+    assert list(padded[3]) == [6, 13, 10]
+    flat, _ = padded_to_csr(padded, lens)
+    np.testing.assert_array_equal(flat, indices)
+
+
+def test_csr_validation():
+    with pytest.raises(ValueError):
+        csr_to_padded(np.array([1, 2, 3]), np.array([1, 1]))  # sum mismatch
+    with pytest.raises(ValueError):
+        csr_to_padded(np.array([1, 2]), np.array([2]), max_pooling=1)
+
+
+def test_offsets():
+    np.testing.assert_array_equal(
+        offsets_from_lengths(np.array([2, 0, 3])), [0, 2, 2, 5])
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 7), min_size=1, max_size=20), st.data())
+def test_csr_padded_roundtrip_property(lengths, data):
+    lengths = np.asarray(lengths, np.int32)
+    n = int(lengths.sum())
+    indices = np.asarray(
+        data.draw(st.lists(st.integers(0, 1000), min_size=n, max_size=n)),
+        np.int32)
+    padded, lens = csr_to_padded(indices, lengths)
+    flat, _ = padded_to_csr(padded, lens)
+    np.testing.assert_array_equal(flat, indices)
+    assert padded.shape[1] == max(1, lengths.max(initial=0))
+
+
+def test_mask_and_effective_weights():
+    rng = np.random.default_rng(0)
+    b = random_jagged_batch(rng, 3, 5, 4, 100, fixed_pooling=False)
+    m = np.asarray(b.mask())
+    lens = np.asarray(b.lengths)
+    for t in range(3):
+        for i in range(5):
+            assert m[t, i].sum() == lens[t, i]
+    w = np.asarray(b.effective_weights())
+    np.testing.assert_array_equal(w, m.astype(np.float32))
+
+
+def test_zipf_batch_in_range():
+    rng = np.random.default_rng(0)
+    b = random_jagged_batch(rng, 2, 8, 4, 50, zipf_a=1.5)
+    idx = np.asarray(b.indices)
+    assert idx.min() >= 0 and idx.max() < 50

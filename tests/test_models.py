@@ -1,0 +1,168 @@
+"""Per-arch smoke tests: reduced config, one forward/train step on CPU,
+shape + finiteness assertions; decode consistency vs full forward."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.configs.base import TrainConfig
+from repro.models import decode as dec
+from repro.models import lm
+from repro.train.step import init_train_state, lm_loss, make_train_step
+
+B, S = 2, 16
+
+
+def _batch_kwargs(cfg, rng):
+    kw = {}
+    if cfg.family == "audio":
+        kw["frames"] = jax.random.normal(
+            rng, (B, cfg.encoder_seq_len, cfg.d_model)) * 0.02
+    if cfg.family == "vlm":
+        kw["patches"] = jax.random.normal(
+            rng, (B, cfg.vision_tokens, cfg.vision_dim)) * 0.02
+    return kw
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_forward(arch):
+    cfg = configs.get_smoke_config(arch)
+    rng = jax.random.key(0)
+    params = lm.init_params(rng, cfg, dtype=jnp.float32)
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    kw = _batch_kwargs(cfg, rng)
+    h, aux = jax.jit(lambda p, t: lm.forward(p, t, cfg, None, **kw))(
+        params, tokens)
+    exp_S = S + (cfg.vision_tokens if cfg.family == "vlm" else 0)
+    assert h.shape == (B, exp_S, cfg.d_model)
+    assert not bool(jnp.isnan(h).any())
+    logits = lm.lm_logits(params, h, cfg, None)
+    assert logits.shape[-1] >= cfg.vocab_size
+    assert not bool(jnp.isnan(logits).any())
+
+
+@pytest.mark.parametrize("arch", configs.ARCH_IDS)
+def test_smoke_train_step(arch):
+    cfg = dataclasses.replace(configs.get_smoke_config(arch),
+                              dtype="float32")
+    tc = TrainConfig(total_steps=5, warmup_steps=1, remat=True)
+    rng = jax.random.key(0)
+    state = init_train_state(rng, cfg, tc, dtype=jnp.float32)
+    batch = {
+        "tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+        "labels": jax.random.randint(jax.random.key(1), (B, S), 0,
+                                     cfg.vocab_size),
+    }
+    if cfg.family == "audio":
+        batch["frames"] = jax.random.normal(
+            rng, (B, cfg.encoder_seq_len, cfg.d_model)) * 0.02
+    if cfg.family == "vlm":
+        batch["patches"] = jax.random.normal(
+            rng, (B, cfg.vision_tokens, cfg.vision_dim)) * 0.02
+    step = jax.jit(make_train_step(cfg, tc, None))
+    new_state, metrics = step(state, batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually changed
+    moved = any(
+        float(jnp.abs(a - b).max()) > 0
+        for a, b in zip(jax.tree.leaves(state["params"]),
+                        jax.tree.leaves(new_state["params"])))
+    assert moved
+
+
+@pytest.mark.parametrize("arch", [a for a in configs.ARCH_IDS
+                                  if a != "internvl2-2b"])
+def test_decode_matches_forward(arch):
+    cfg = configs.get_smoke_config(arch)
+    rng = jax.random.key(0)
+    params = lm.init_params(rng, cfg, dtype=jnp.float32)
+    tokens = jax.random.randint(rng, (B, S), 0, cfg.vocab_size)
+    kw = _batch_kwargs(cfg, rng)
+    h, _ = jax.jit(lambda p, t: lm.forward(p, t, cfg, None, **kw))(
+        params, tokens)
+    pf_kw = {"frames": kw["frames"]} if cfg.family == "audio" else {}
+    cache, _ = dec.prefill(params, tokens[:, :-1], cfg, None,
+                           max_len=S + 4, **pf_kw)
+    cache, h_dec = dec.decode_step(params, cache, tokens[:, -1], cfg, None)
+    err = float(jnp.abs(h_dec - h[:, -1]).max())
+    assert err < 2e-3, err
+    assert int(cache["length"][0]) == S
+
+
+@pytest.mark.parametrize("arch", ["moonshot-v1-16b-a3b", "deepseek-v3-671b"])
+def test_moe_aux_metrics(arch):
+    cfg = dataclasses.replace(configs.get_smoke_config(arch),
+                              dtype="float32")
+    tc = TrainConfig(remat=False)
+    rng = jax.random.key(0)
+    state = init_train_state(rng, cfg, tc, dtype=jnp.float32)
+    batch = {"tokens": jax.random.randint(rng, (B, S), 0, cfg.vocab_size),
+             "labels": jax.random.randint(rng, (B, S), 0, cfg.vocab_size)}
+    loss, metrics = lm_loss(state["params"], batch, cfg, None, tc)
+    assert "moe_aux" in metrics
+    assert float(metrics["moe_aux"]) > 0
+    if cfg.mtp_depth:
+        assert "mtp_ce" in metrics
+
+
+def test_rwkv_chunked_equals_scan():
+    """The §Perf hillclimb change (chunk-parallel rwkv) is exact."""
+    from repro.models import ssm
+    cfg = configs.get_smoke_config("rwkv6-1.6b")
+    rng = jax.random.key(0)
+    p = jax.tree.map(lambda a: a[0],
+                     ssm.init_rwkv_params(rng, 1, cfg, jnp.float32))
+    for Bv, Sv, chunk in [(2, 37, 8), (1, 64, 64), (3, 16, 4)]:
+        x = jax.random.normal(jax.random.fold_in(rng, Sv),
+                              (Bv, Sv, cfg.d_model)) * 0.5
+        y1, (s1, _) = ssm.rwkv_time_mix(p, x, cfg)
+        y2, (s2, _) = ssm.rwkv_time_mix_chunked(p, x, cfg, chunk=chunk)
+        assert float(jnp.abs(y1 - y2).max()) < 1e-4
+        assert float(jnp.abs(s1 - s2).max()) < 1e-4
+
+
+def test_full_configs_match_assignment():
+    """The exact published numbers from the assignment table."""
+    expect = {
+        "moonshot-v1-16b-a3b": (48, 2048, 16, 16, 163840),
+        "deepseek-v3-671b": (61, 7168, 128, 128, 129280),
+        "hymba-1.5b": (32, 1600, 25, 5, 32001),
+        "starcoder2-15b": (40, 6144, 48, 4, 49152),
+        "yi-34b": (60, 7168, 56, 8, 64000),
+        "granite-8b": (36, 4096, 32, 8, 49152),
+        "nemotron-4-340b": (96, 18432, 96, 8, 256000),
+        "whisper-base": (6, 512, 8, 8, 51865),
+        "internvl2-2b": (24, 2048, 16, 8, 92553),
+        "rwkv6-1.6b": (24, 2048, 32, 32, 65536),
+    }
+    dff = {"moonshot-v1-16b-a3b": 1408, "deepseek-v3-671b": 2048,
+           "hymba-1.5b": 5504, "starcoder2-15b": 24576, "yi-34b": 20480,
+           "granite-8b": 14336, "nemotron-4-340b": 73728,
+           "whisper-base": 2048, "internvl2-2b": 8192, "rwkv6-1.6b": 7168}
+    for arch, (L, d, H, KH, V) in expect.items():
+        cfg = configs.get_config(arch)
+        assert cfg.num_layers == L, arch
+        assert cfg.d_model == d, arch
+        assert cfg.num_heads == H, arch
+        assert cfg.num_kv_heads == KH, arch
+        assert cfg.vocab_size == V, arch
+        eff = cfg.moe_d_ff if arch in ("moonshot-v1-16b-a3b",
+                                       "deepseek-v3-671b") else cfg.d_ff
+        assert eff == dff[arch], arch
+    # MoE structure
+    ms = configs.get_config("moonshot-v1-16b-a3b")
+    assert (ms.num_experts, ms.experts_per_token) == (64, 6)
+    ds = configs.get_config("deepseek-v3-671b")
+    assert (ds.num_experts, ds.experts_per_token) == (256, 8)
+    assert ds.attention == "mla" and ds.mtp_depth == 1
+    hy = configs.get_config("hymba-1.5b")
+    assert hy.ssm_state == 16
+    # deepseek parameter count sanity: ~671B total, ~37B active
+    total = ds.param_count()
+    active = ds.active_param_count()
+    assert 6.0e11 < total < 7.5e11, total
+    assert 3.0e10 < active < 4.5e10, active

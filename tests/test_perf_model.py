@@ -1,0 +1,85 @@
+"""α–β model calibration against the paper's own observations (§3, §5)."""
+import numpy as np
+
+from repro.core.perf_model import (
+    H100_DGX,
+    TPU_V5E,
+    EmbeddingWorkload,
+    collective_time,
+    devices_for_table,
+    embedding_bag_time,
+    local_vs_distributed_speedup,
+    phase_times,
+)
+from repro.core.sharding_plan import TableSpec, plan
+
+
+def test_small_message_onesided_wins():
+    """Fig. 1: NVSHMEM ~10-20x faster below 2-8 KB."""
+    for op in ("all_reduce", "all_gather", "all_to_all", "broadcast"):
+        t_nccl = collective_time(op, 2048, 8, H100_DGX.bulk)
+        t_nv = collective_time(op, 2048, 8, H100_DGX.onesided)
+        assert t_nv * 5 < t_nccl, (op, t_nv, t_nccl)
+
+
+def test_large_message_bulk_wins():
+    """Fig. 1: NCCL wins beyond ~256 KB-1 MB."""
+    for op in ("all_reduce", "all_gather", "all_to_all", "broadcast"):
+        t_nccl = collective_time(op, 16 * 2**20, 8, H100_DGX.bulk)
+        t_nv = collective_time(op, 16 * 2**20, 8, H100_DGX.onesided)
+        assert t_nccl < t_nv, op
+
+
+def test_crossover_exists_between_2k_and_1m():
+    sizes = np.logspace(np.log10(256), np.log10(4 * 2**20), 64)
+    diff = [collective_time("all_to_all", s, 8, H100_DGX.onesided) -
+            collective_time("all_to_all", s, 8, H100_DGX.bulk)
+            for s in sizes]
+    sign_changes = np.sum(np.diff(np.sign(diff)) != 0)
+    assert sign_changes >= 1
+
+
+def test_devices_for_table_rule():
+    """Paper: 10 TB table / 80 GB HBM -> 128 GPUs."""
+    assert devices_for_table(10e12, H100_DGX) == 128
+    assert devices_for_table(50e9, H100_DGX) == 1
+
+
+def test_fig9_projection_range():
+    """Paper Fig. 9: 10 TB table projects 22.8x-108.2x slowdown when
+    distributed, depending on message size. Our calibrated model must
+    produce slowdowns spanning (at least) that order of magnitude."""
+    speedups = []
+    for tables in (1, 8, 64):
+        for pooling in (4, 32):
+            for dim in (32, 256):
+                w = EmbeddingWorkload(num_tables=tables, batch_per_device=128,
+                                      pooling=pooling, dim=dim)
+                speedups.append(
+                    local_vs_distributed_speedup(10e12, w, H100_DGX))
+    lo, hi = min(speedups), max(speedups)
+    assert lo > 5, lo            # distribution is always a big slowdown
+    assert hi > 100, hi          # small messages: latency-dominated
+    assert lo < 30, lo           # large messages: bandwidth-dominated
+
+
+def test_phase_times_monotonic():
+    w = EmbeddingWorkload(num_tables=8, batch_per_device=128, pooling=8,
+                          dim=128)
+    t2 = embedding_bag_time(w, 2, TPU_V5E)
+    t8 = embedding_bag_time(w, 8, TPU_V5E)
+    assert t8 > 0 and t2 > 0
+    p = phase_times(w, 8, TPU_V5E)
+    assert set(p) == {"permute", "gather", "reduce_scatter"}
+
+
+def test_planner_tw_packs_small_rw_splits_big():
+    tables = [TableSpec(f"small{i}", rows=1000, dim=32, pooling=4)
+              for i in range(6)]
+    tables.append(TableSpec("huge", rows=30_000_000, dim=128, pooling=32))
+    p = plan(tables, num_shards=8, batch_per_shard=128,
+             hbm_budget_bytes=2.5e9)
+    assert p.strategy_of("huge") == "row"
+    assert all(p.strategy_of(f"small{i}") == "table" for i in range(6))
+    # memory balanced within budget
+    assert max(p.per_shard_bytes) <= 2e9 * 1.5
