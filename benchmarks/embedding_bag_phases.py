@@ -46,6 +46,7 @@ def traced_bytes(num_tables: int, batch: int, pooling: int, dim: int,
     from repro.core.embedding_bag import (
         EmbeddingBagConfig, pooled_lookup_sharded)
     from repro.core.jagged import JaggedBatch
+    from repro.utils.compat import shard_map
 
     cfg = EmbeddingBagConfig(num_tables=num_tables, rows_per_table=1 << 20,
                              dim=dim, sharding="row", rw_impl="a2a")
@@ -61,7 +62,7 @@ def traced_bytes(num_tables: int, batch: int, pooling: int, dim: int,
         lengths=jax.ShapeDtypeStruct((num_tables, batch), jnp.int32),
     )
     with comm.instrument() as events:
-        jax.jit(jax.shard_map(
+        jax.jit(shard_map(
             lambda t, b: pooled_lookup_sharded(t, b, cfg),
             mesh=mesh,
             in_specs=(P(None, "model", None), P()),

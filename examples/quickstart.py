@@ -9,7 +9,7 @@ gather/pool -> reduce-scatter), and verifies it against the local oracle.
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.utils.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.core.embedding_bag import (

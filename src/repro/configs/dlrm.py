@@ -31,6 +31,8 @@ class DLRMConfig:
     rw_impl: str = "allgather"           # allgather | a2a (paper-faithful)
     rw_backend: str = "bulk"             # bulk | onesided
     dtype: str = "float32"
+    kernel_mode: str = "auto"            # auto | reference | pallas | interpret
+    fused: bool = True                   # table-batched (TBE) kernel path
 
     def __post_init__(self):
         if self.interaction == "dot" and \
@@ -49,6 +51,8 @@ class DLRMConfig:
             rw_impl=self.rw_impl,
             rw_backend=self.rw_backend,
             dtype=self.dtype,
+            kernel_mode=self.kernel_mode,
+            fused=self.fused,
         )
 
     @property

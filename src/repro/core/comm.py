@@ -29,6 +29,8 @@ from typing import List, Optional
 
 import jax
 import jax.numpy as jnp
+
+from repro.utils.compat import axis_size
 import numpy as np
 
 
@@ -67,7 +69,7 @@ def _record(op: str, array, axis_name, backend: str):
         return
     size = int(np.prod(array.shape)) * jnp.dtype(array.dtype).itemsize
     _LOG.events.append(
-        CollectiveEvent(op, size, jax.lax.axis_size(axis_name), backend)
+        CollectiveEvent(op, size, axis_size(axis_name), backend)
     )
 
 
@@ -149,6 +151,6 @@ def reduce_scatter(
 def permute_ring(x, axis_name, *, shift=1, backend="bulk"):
     """Ring collective-permute (building block for pipelined schedules)."""
     _record("permute", x, axis_name, backend)
-    n = jax.lax.axis_size(axis_name)
+    n = axis_size(axis_name)
     perm = [(i, (i + shift) % n) for i in range(n)]
     return jax.lax.ppermute(x, axis_name, perm)

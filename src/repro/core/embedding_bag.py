@@ -29,6 +29,12 @@ Two RW implementations are provided:
 The mesh contract: this module is called INSIDE ``shard_map`` with the
 batch sharded over the data axes and REPLICATED over ``model_axis``; tables
 are sharded over ``model_axis`` according to ``cfg.sharding``.
+
+Kernel execution is table-batched by default (``cfg.fused``): each shard
+issues ONE fused TBE ``pallas_call`` covering all of its tables
+(kernels/embedding_gather.py) instead of T vmapped single-table launches —
+the paper's #tables sweep (§5) is a launch-count sweep under the unfused
+baseline and flat under TBE.
 """
 from __future__ import annotations
 
@@ -38,6 +44,8 @@ from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.utils.compat import axis_size
 
 from repro.core import comm
 from repro.core.jagged import JaggedBatch
@@ -57,6 +65,10 @@ class EmbeddingBagConfig:
     capacity_factor: float = 2.0     # a2a bucket capacity multiplier
     emulate_rs_with_a2a: bool = False  # paper's NVSHMEM reduce-scatter workaround
     kernel_mode: str = "auto"        # auto | reference | pallas | interpret
+    # fused: run the table-batched (TBE) kernel — ONE pallas_call for all T
+    # tables per shard. False vmaps the single-table kernel (T launches);
+    # kept as the A/B baseline for benchmarks/tbe_sweep.py.
+    fused: bool = True
     # --- beyond-paper levers (EXPERIMENTS.md §beyond-paper) ---
     # rs_dtype: cast partial pooled vectors to this dtype before the
     # phase-3 reduce-scatter/all-reduce — halves output traffic at bf16
@@ -112,17 +124,20 @@ def table_pspec(cfg: EmbeddingBagConfig, model_axis: str = "model"):
 def pooled_lookup_local(
     tables: jax.Array, batch: JaggedBatch, cfg: EmbeddingBagConfig
 ) -> jax.Array:
-    """(T, R, D) x JaggedBatch -> (B, T, D), no communication."""
-    def one(table, idx, lens, w):
-        return kops.embedding_bag(
-            table, idx, lens, w, combiner=cfg.combiner, mode=cfg.kernel_mode
-        )
-    w = batch.weights
-    out = jax.vmap(one)(
+    """(T, R, D) x JaggedBatch -> (B, T, D), no communication.
+
+    All T tables go through ONE table-batched kernel call when
+    ``cfg.fused`` (the default); ``fused=False`` restores the per-table
+    vmap baseline.
+    """
+    out = kops.embedding_bag_batched(
         tables,
         batch.indices,
         batch.lengths,
-        w if w is not None else jnp.ones_like(batch.indices, jnp.float32),
+        batch.weights,
+        combiner=cfg.combiner,
+        mode=cfg.kernel_mode,
+        fused=cfg.fused,
     )                                                        # (T, B, D)
     return out.transpose(1, 0, 2)
 
@@ -138,22 +153,20 @@ def _rw_allgather(
     model_axis: str,
     scatter_batch: bool,
 ) -> jax.Array:
-    E = jax.lax.axis_size(model_axis)
+    E = axis_size(model_axis)
     rank = jax.lax.axis_index(model_axis)
     rows_per_shard = cfg.rows_per_table // E
     offset = rank * rows_per_shard
 
-    def one(table, idx, lens, w):
-        return kops.embedding_bag_rw_partial(
-            table, offset, idx, lens, w, mode=cfg.kernel_mode
-        )
-
-    w = batch.weights
-    partial_out = jax.vmap(one)(
+    # one fused TBE call pools every table's owned rows on this shard
+    partial_out = kops.embedding_bag_rw_partial_batched(
         table_shard,
+        offset,
         batch.indices,
         batch.lengths,
-        w if w is not None else jnp.ones_like(batch.indices, jnp.float32),
+        batch.weights,
+        mode=cfg.kernel_mode,
+        fused=cfg.fused,
     ).transpose(1, 0, 2)                                     # (B, T, D)
 
     out_dtype = partial_out.dtype
@@ -235,7 +248,7 @@ def _rw_a2a(
     distinct mini-batch — then phases 1-3 reassemble full pooled outputs
     for that slice; a final all-gather restores model-axis replication.
     """
-    E = jax.lax.axis_size(model_axis)
+    E = axis_size(model_axis)
     rank = jax.lax.axis_index(model_axis)
     rows_per_shard = cfg.rows_per_table // E
     T = cfg.num_tables
@@ -283,7 +296,10 @@ def _rw_a2a(
     valid = (recv_w != 0.0) & (recv_row >= 0) & (recv_row < rows_per_shard)
     safe_row = jnp.where(valid, recv_row, 0)
     safe_tab = jnp.where(valid, recv_tab, 0)
-    rows = table_shard[safe_tab.reshape(-1), safe_row.reshape(-1)]  # (E*C, D)
+    # gather in the flattened (T * rows_per_shard, D) row space — the same
+    # address math as the fused TBE kernel (one gather, not a 2-D index)
+    flat_addr = (safe_tab * rows_per_shard + safe_row).reshape(-1)
+    rows = table_shard.reshape(-1, table_shard.shape[-1])[flat_addr]  # (E*C, D)
     contrib = rows.astype(jnp.float32) * (
         recv_w.reshape(-1) * valid.reshape(-1).astype(jnp.float32)
     )[:, None]
@@ -337,7 +353,7 @@ def _cw(table_shard, batch, cfg, model_axis, keep_sharded):
 
 def _tw(table_shard, batch, cfg, model_axis, keep_sharded):
     # shard: (T/E, R, D); batch replicated -> pool owned tables only
-    E = jax.lax.axis_size(model_axis)
+    E = axis_size(model_axis)
     rank = jax.lax.axis_index(model_axis)
     Tl = cfg.num_tables // E
     sl = lambda x: jax.lax.dynamic_slice_in_dim(x, rank * Tl, Tl, axis=0)
@@ -430,12 +446,10 @@ def pooled_lookup_hot(
     w_hot = eff * is_hot
     w_cold = eff * (1.0 - is_hot)
 
-    def one_hot_table(tbl, idx, w):
-        safe = jnp.clip(idx, 0, hot - 1)
-        return kops.embedding_bag(tbl, safe, None, w, mode=cfg.kernel_mode)
-
-    hot_out = jax.vmap(one_hot_table)(
-        hot_table, batch.indices, w_hot).transpose(1, 0, 2)   # (B, T, D)
+    safe = jnp.clip(batch.indices, 0, hot - 1)
+    hot_out = kops.embedding_bag_batched(
+        hot_table, safe, None, w_hot, mode=cfg.kernel_mode, fused=cfg.fused
+    ).transpose(1, 0, 2)                                      # (B, T, D)
 
     cold_batch = JaggedBatch(batch.indices, batch.lengths, w_cold)
     cold_out = pooled_lookup_sharded(table_shard, cold_batch, cfg,

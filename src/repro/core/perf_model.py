@@ -141,6 +141,27 @@ def embedding_bag_time(
     return sum(phase_times(w, n_devices, hw, onesided=onesided).values())
 
 
+def tbe_gather_phases(
+    w: EmbeddingWorkload, hw: Hardware, *, fused: bool
+) -> Dict[str, float]:
+    """Modeled gather-phase decomposition, fused-TBE vs per-table launches.
+
+    ``launch`` is the per-kernel setup floor (grid launch + pipeline
+    fill/drain + index prefetch), paid once under TBE and T times under the
+    per-table baseline. ``stream`` is the HBM row traffic — identical in
+    both layouts, which is exactly why the paper's #tables axis (§5) is a
+    launch-overhead axis at small pooling sizes.
+    """
+    launches = 1 if fused else w.num_tables
+    stream_bytes = (
+        w.batch_per_device * w.num_tables * w.pooling * w.dim * w.dtype_bytes
+    )
+    return {
+        "launch": launches * hw.gather_overhead_s,
+        "stream": stream_bytes / hw.hbm_Bps,
+    }
+
+
 # ---------------------------------------------------------------------------
 # Fig. 9 — local vs distributed projection
 # ---------------------------------------------------------------------------

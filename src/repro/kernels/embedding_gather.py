@@ -1,4 +1,4 @@
-"""Pallas TPU kernel for the embedding-bag gather+pool phase.
+"""Pallas TPU kernels for the embedding-bag gather+pool phase.
 
 The paper's phase-2 "gather kernel" (§4.3) retrieves ``L`` rows per sample
 from an HBM-resident table and pools (weighted-sums) them. On GPU this is a
@@ -11,19 +11,44 @@ CUDA gather; the TPU-native formulation is *scalar-prefetch driven DMA*:
   - the kernel body accumulates ``w[b, l] * row`` into the f32 output
     block in VREGs.
 
-Grid: ``(B, num_D_blocks, L)`` — the L axis is innermost ("arbitrary"
-semantics) so all visits to an output block ``(b, d)`` are consecutive and
-accumulation is legal; B and D blocks are parallel.
+Two kernels:
 
-Two variants:
-  * ``gather_pool_pallas``        — plain lookup (indices pre-validated).
-  * the RW-masked variant is expressed by pre-masking: ops.py maps
-    out-of-shard ids to row 0 with weight 0, so ONE kernel serves both the
-    single-device and the row-wise-parallel (paper §4.2) paths.
+``gather_pool_pallas`` — single table. Grid ``(B, num_D_blocks, L)``; the
+L axis is innermost ("arbitrary" semantics) so all visits to an output
+block ``(b, d)`` are consecutive and accumulation is legal; B and D blocks
+are parallel.
+
+``gather_pool_tbe_pallas`` — TABLE-BATCHED (TBE, FBGEMM-style): executes
+the lookups of ALL ``T`` stacked tables in ONE ``pallas_call``. The paper
+sweeps #tables (§5) and per-table launches pay T separate grid setups and
+pipeline drains; fusing removes them. Design:
+
+  * Flattened row space — the stacked ``(T, R, D)`` tables are viewed as
+    one ``(T*R, D)`` array; table ``t``'s rows live at ``[t*R, (t+1)*R)``.
+    Addressing is fully general: a ``(T,)`` int32 ``row_offsets`` vector
+    is scalar-prefetched alongside the indices, so ragged per-table row
+    counts only need a different offsets vector (offsets[t] = start of
+    table t in the flat row space).
+  * Offset math — lookup ids stay TABLE-LOCAL on the host; the table
+    BlockSpec ``index_map`` computes the flat row
+    ``row_offsets[tb // B] + idx[tb, l]`` at DMA-issue time from the two
+    prefetched SMEM arrays (no O(T*B*L) index rewrite materialized in HBM).
+  * Grid layout — ``(T*B, num_D_blocks, L)``: the fused sample axis
+    ``tb = t*B + b`` covers every (table, sample) pair, so one
+    double-buffered DMA pipeline streams rows of all tables back-to-back;
+    L is innermost/"arbitrary" for legal accumulation, T*B and D parallel.
+  * Output — ``(T*B, D)`` f32, reshaped to ``(T, B, D)`` by the caller.
+
+The RW-masked (row-wise-parallel, paper §4.2) variants of BOTH kernels are
+expressed by pre-masking: ops.py maps out-of-shard ids to local row 0 with
+weight 0, so the same kernels serve the single-device and the sharded
+paths (for TBE the shard's flat row space is ``(T * R/E, D)`` and
+``row_offsets[t] = t * R/E``).
 
 VMEM budget per grid step: 2 double-buffered (1, Db) table blocks +
 (1, Db) f32 accumulator + (1, L) weights — Db is chosen ≤ 2048 lanes so the
-working set stays ≪ 1 MiB, far under v5e VMEM.
+working set stays ≪ 1 MiB, far under v5e VMEM. Identical for the fused
+kernel: batching tables grows the grid, not the working set.
 """
 from __future__ import annotations
 
@@ -33,6 +58,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
+
+from repro.utils.compat import CompilerParams
 
 
 DEFAULT_D_BLOCK = 2048  # lanes per block; multiple of 128 (MXU/VPU lane width)
@@ -94,8 +121,78 @@ def gather_pool_pallas(
         functools.partial(_gather_pool_kernel, L=L),
         grid_spec=grid_spec,
         out_shape=jax.ShapeDtypeStruct((B, D), jnp.float32),
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             dimension_semantics=("parallel", "parallel", "arbitrary"),
         ),
         interpret=interpret,
     )(indices, weights.astype(jnp.float32), table)
+
+
+# ---------------------------------------------------------------------------
+# Table-batched (TBE) kernel — all T tables in one launch
+# ---------------------------------------------------------------------------
+
+def _tbe_kernel(off_ref, idx_ref, w_ref, table_blk, out_blk, *, L: int):
+    """One grid step of the fused kernel: the single-table accumulate over
+    the fused (tb = t*B + b) sample axis. ``off_ref``/``idx_ref`` are
+    consumed by the BlockSpec index_maps, not the body."""
+    del off_ref
+    _gather_pool_kernel(idx_ref, w_ref, table_blk, out_blk, L=L)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "d_block"))
+def gather_pool_tbe_pallas(
+    tables: jax.Array,    # (T, R, D) stacked tables
+    indices: jax.Array,   # (T, B, L) int32 TABLE-LOCAL ids — in [0, R)
+    weights: jax.Array,   # (T, B, L) f32 — 0 for masked/padded slots
+    *,
+    interpret: bool = False,
+    d_block: int | None = None,
+) -> jax.Array:
+    """Fused pooled lookup over all tables, ONE ``pallas_call``.
+
+    ``out[t, b] = sum_l weights[t,b,l] * tables[t, indices[t,b,l]]``
+
+    Returns (T, B, D) f32 (accumulation dtype; callers cast). See the
+    module docstring for the flattened-row-space / offset / grid design.
+    """
+    T, R, D = tables.shape
+    Ti, B, L = indices.shape
+    if Ti != T:
+        raise ValueError(f"tables T={T} != indices T={Ti}")
+    Db = d_block or _pick_d_block(D)
+    if D % Db != 0:
+        raise ValueError(f"D={D} not divisible by d_block={Db}")
+    nD = D // Db
+    TB = T * B
+
+    flat_tables = tables.reshape(T * R, D)
+    flat_idx = indices.reshape(TB, L)
+    flat_w = weights.reshape(TB, L).astype(jnp.float32)
+    row_offsets = jnp.arange(T, dtype=jnp.int32) * R
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,   # row_offsets (T,), flat_idx (T*B, L)
+        grid=(TB, nD, L),
+        in_specs=[
+            # weights: one (1, L) row per fused sample
+            pl.BlockSpec((1, L), lambda tb, d, l, off, idx: (tb, 0)),
+            # flat table: block of row  off[tb // B] + idx[tb, l]
+            pl.BlockSpec(
+                (1, Db),
+                lambda tb, d, l, off, idx: (off[tb // B] + idx[tb, l], d),
+            ),
+        ],
+        out_specs=pl.BlockSpec((1, Db), lambda tb, d, l, off, idx: (tb, d)),
+    )
+
+    out = pl.pallas_call(
+        functools.partial(_tbe_kernel, L=L),
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((TB, D), jnp.float32),
+        compiler_params=CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary"),
+        ),
+        interpret=interpret,
+    )(row_offsets, flat_idx, flat_w, flat_tables)
+    return out.reshape(T, B, D)

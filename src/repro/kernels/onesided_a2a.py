@@ -31,6 +31,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.utils.compat import CompilerParams, axis_size
+
 
 def _a2a_kernel(x_ref, o_ref, send_sem, recv_sem, *, axis_name: str,
                 num_ranks: int):
@@ -64,7 +66,7 @@ def onesided_all_to_all(x: jax.Array, axis_name: str, *,
                           num_ranks=num_ranks),
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             collective_id=7,
             has_side_effects=True,
         ),
@@ -88,7 +90,7 @@ def onesided_ring_permute(x: jax.Array, axis_name: str, *, shift: int = 1,
 
     def kernel(x_ref, o_ref, send_sem, recv_sem):
         my_id = jax.lax.axis_index(axis_name)
-        n = jax.lax.axis_size(axis_name)
+        n = axis_size(axis_name)
         dst = jax.lax.rem(my_id + shift, n)
         copy = pltpu.make_async_remote_copy(
             src_ref=x_ref, dst_ref=o_ref, send_sem=send_sem,
@@ -101,7 +103,7 @@ def onesided_ring_permute(x: jax.Array, axis_name: str, *, shift: int = 1,
         kernel,
         out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
         scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=CompilerParams(
             collective_id=8, has_side_effects=True),
         interpret=interpret,
     )(x)

@@ -1,7 +1,8 @@
 """Public kernel ops: backend dispatch + differentiability.
 
-``embedding_bag(...)`` is the single entry point used by the rest of the
-framework. ``mode`` selects:
+``embedding_bag(...)`` (single table) and ``embedding_bag_batched(...)``
+(all T stacked tables at once) are the entry points used by the rest of
+the framework. ``mode`` selects:
 
   * "reference" — pure-jnp oracle (ref.py). Default on CPU and for the
     512-device dry-run (TPU Pallas primitives must not be traced there).
@@ -10,19 +11,30 @@ framework. ``mode`` selects:
     (correctness validation path used by the test suite).
   * "auto"      — "pallas" on TPU backends, else "reference".
 
-The Pallas forward is wrapped in a ``custom_vjp`` whose backward is the
-XLA scatter-add (segment-sum) — gathers' transpose — so the kernel path is
-trainable (needed for the LM vocab-embedding integration).
+The batched ops additionally take ``fused``: True (default) runs the
+table-batched TBE kernel — ONE ``pallas_call`` for all tables; False
+falls back to vmapping the single-table kernel (T separate launches),
+kept as the A/B baseline for the benchmark sweep.
+
+The Pallas forwards are wrapped in ``custom_vjp``s whose backward is the
+XLA scatter-add (segment-sum) — gathers' transpose — so both kernel paths
+are trainable (needed for the LM vocab-embedding integration and DLRM
+training). The TBE backward scatter-adds into the FLATTENED (T*R, D) row
+space with the same per-table offsets as the forward.
 """
 from __future__ import annotations
 
+import functools
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
 from repro.kernels import ref as _ref
-from repro.kernels.embedding_gather import gather_pool_pallas
+from repro.kernels.embedding_gather import (
+    gather_pool_pallas,
+    gather_pool_tbe_pallas,
+)
 
 
 def _resolve_mode(mode: str) -> str:
@@ -32,19 +44,35 @@ def _resolve_mode(mode: str) -> str:
 
 
 def _effective_weights(indices, lengths, weights):
-    B, L = indices.shape
+    """Padding/length mask times optional weights. Rank-generic: serves the
+    single-table (B, L)/(B,) and the batched (T, B, L)/(T, B) layouts."""
+    L = indices.shape[-1]
     if lengths is None:
-        mask = jnp.ones((B, L), jnp.float32)
+        mask = jnp.ones(indices.shape, jnp.float32)
     else:
-        mask = (jnp.arange(L)[None, :] < lengths[:, None]).astype(jnp.float32)
+        mask = (jnp.arange(L) < lengths[..., None]).astype(jnp.float32)
     if weights is not None:
         mask = mask * weights.astype(jnp.float32)
     return mask
 
 
-# --- differentiable pallas path --------------------------------------------
+def _premask_rw(table_rows, row_offset, indices, lengths, weights):
+    """RW pre-masking shared by both kernel layouts: map out-of-shard
+    GLOBAL ids to (local row 0, weight 0) so one gather kernel serves the
+    single-device and row-wise-parallel paths."""
+    local = indices - row_offset
+    owned = (local >= 0) & (local < table_rows)
+    safe = jnp.where(owned, local, 0).astype(jnp.int32)
+    eff_w = _effective_weights(indices, lengths, weights) \
+        * owned.astype(jnp.float32)
+    return safe, eff_w
 
-@jax.custom_vjp
+
+# --- differentiable pallas path --------------------------------------------
+# ``interpret`` is a nondiff/static argnum: it must stay a Python bool all
+# the way down to the pallas_call even when the op is called under jit.
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
 def _pooled_lookup_pallas(table, indices, eff_w, interpret):
     return gather_pool_pallas(table, indices, eff_w, interpret=interpret)
 
@@ -54,7 +82,7 @@ def _pooled_fwd(table, indices, eff_w, interpret):
     return out, (table, indices, eff_w)
 
 
-def _pooled_bwd(res, g):
+def _pooled_bwd(interpret, res, g):
     table, indices, eff_w = res
     R, D = table.shape
     # d table[r] = sum_{b,l: idx==r} w[b,l] * g[b]  — scatter-add (gather^T)
@@ -63,10 +91,47 @@ def _pooled_bwd(res, g):
     d_table = jax.ops.segment_sum(contrib, flat_idx, num_segments=R)
     # d eff_w[b,l] = <table[idx[b,l]], g[b]>
     d_w = jnp.einsum("bld,bd->bl", table[indices].astype(jnp.float32), g)
-    return d_table.astype(table.dtype), None, d_w, None
+    return d_table.astype(table.dtype), None, d_w
 
 
 _pooled_lookup_pallas.defvjp(_pooled_fwd, _pooled_bwd)
+
+
+# --- differentiable fused (table-batched) path ------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3,))
+def _pooled_lookup_tbe(tables, indices, eff_w, interpret):
+    return gather_pool_tbe_pallas(tables, indices, eff_w, interpret=interpret)
+
+
+def _tbe_fwd(tables, indices, eff_w, interpret):
+    out = gather_pool_tbe_pallas(tables, indices, eff_w, interpret=interpret)
+    return out, (tables, indices, eff_w)
+
+
+def _tbe_bwd(interpret, res, g):
+    tables, indices, eff_w = res
+    T, R, D = tables.shape
+    # scatter-add into the flattened (T*R, D) row space — the transpose of
+    # the kernel's offset-adjusted gather
+    offs = (jnp.arange(T, dtype=indices.dtype) * R)[:, None, None]
+    flat_idx = (indices + offs).reshape(-1)
+    contrib = (eff_w[..., None] * g[:, :, None, :]).reshape(-1, D)
+    d_flat = jax.ops.segment_sum(contrib, flat_idx, num_segments=T * R)
+    # d eff_w[t,b,l] = <tables[t, idx[t,b,l]], g[t,b]>
+    rows = tables.reshape(T * R, D)[flat_idx].reshape(*indices.shape, D)
+    d_w = jnp.einsum("tbld,tbd->tbl", rows.astype(jnp.float32), g)
+    return d_flat.reshape(T, R, D).astype(tables.dtype), None, d_w
+
+
+_pooled_lookup_tbe.defvjp(_tbe_fwd, _tbe_bwd)
+
+
+def _pooled_lookup_per_table(tables, indices, eff_w, interpret):
+    """Unfused baseline: vmap the single-table kernel (T launches)."""
+    return jax.vmap(
+        lambda t, i, w: _pooled_lookup_pallas(t, i, w, interpret)
+    )(tables, indices, eff_w)
 
 
 # --- public API --------------------------------------------------------------
@@ -119,10 +184,73 @@ def embedding_bag_rw_partial(
         return _ref.embedding_bag_masked_ref(
             table_shard, row_offset, indices, lengths, weights
         )
-    R = table_shard.shape[0]
-    local = indices - row_offset
-    owned = (local >= 0) & (local < R)
-    safe = jnp.where(owned, local, 0).astype(jnp.int32)
-    eff_w = _effective_weights(indices, lengths, weights) * owned.astype(jnp.float32)
+    safe, eff_w = _premask_rw(
+        table_shard.shape[0], row_offset, indices, lengths, weights)
     out = _pooled_lookup_pallas(table_shard, safe, eff_w, mode == "interpret")
     return out.astype(table_shard.dtype)
+
+
+# --- table-batched public API -----------------------------------------------
+
+def embedding_bag_batched(
+    tables: jax.Array,         # (T, R, D)
+    indices: jax.Array,        # (T, B, L) table-local ids
+    lengths: Optional[jax.Array] = None,   # (T, B)
+    weights: Optional[jax.Array] = None,   # (T, B, L)
+    *,
+    combiner: str = "sum",
+    mode: str = "auto",
+    fused: bool = True,
+) -> jax.Array:
+    """Pooled lookup over ALL tables, ``(T,R,D) x (T,B,L) -> (T,B,D)``.
+
+    ``fused=True`` executes one TBE ``pallas_call`` for every table;
+    ``fused=False`` vmaps the single-table kernel (T launches).
+    """
+    mode = _resolve_mode(mode)
+    if mode == "reference":
+        return _ref.embedding_bag_batched_ref(
+            tables, indices, lengths, weights, combiner=combiner
+        )
+    if mode not in ("pallas", "interpret"):
+        raise ValueError(f"unknown mode {mode!r}")
+    eff_w = _effective_weights(indices, lengths, weights)
+    lookup = _pooled_lookup_tbe if fused else _pooled_lookup_per_table
+    out = lookup(tables, indices, eff_w, mode == "interpret")
+    if combiner == "mean":
+        denom = jnp.maximum(eff_w.sum(axis=2, keepdims=True), 1.0)
+        out = out / denom
+    elif combiner != "sum":
+        raise ValueError(f"unknown combiner {combiner!r}")
+    return out.astype(tables.dtype)
+
+
+def embedding_bag_rw_partial_batched(
+    table_shards: jax.Array,   # (T, R_shard, D) this device's row slices
+    row_offset,
+    indices: jax.Array,        # (T, B, L) GLOBAL row ids
+    lengths: Optional[jax.Array] = None,
+    weights: Optional[jax.Array] = None,
+    *,
+    mode: str = "auto",
+    fused: bool = True,
+) -> jax.Array:
+    """Table-batched row-wise-parallel partial pool -> (T, B, D).
+
+    The batched analogue of :func:`embedding_bag_rw_partial`: out-of-shard
+    ids are pre-masked to (local row 0, weight 0), then ONE fused TBE call
+    pools every table's owned rows (the shard's flat row space is
+    ``(T * R_shard, D)`` with ``row_offsets[t] = t * R_shard``).
+    """
+    mode = _resolve_mode(mode)
+    if mode == "reference":
+        return _ref.embedding_bag_masked_batched_ref(
+            table_shards, row_offset, indices, lengths, weights
+        )
+    if mode not in ("pallas", "interpret"):
+        raise ValueError(f"unknown mode {mode!r}")
+    safe, eff_w = _premask_rw(
+        table_shards.shape[1], row_offset, indices, lengths, weights)
+    lookup = _pooled_lookup_tbe if fused else _pooled_lookup_per_table
+    out = lookup(table_shards, safe, eff_w, mode == "interpret")
+    return out.astype(table_shards.dtype)

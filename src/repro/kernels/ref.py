@@ -76,6 +76,44 @@ def embedding_bag_masked_ref(
     return out.astype(table_shard.dtype)
 
 
+def embedding_bag_batched_ref(
+    tables: jax.Array,         # (T, R, D) stacked tables
+    indices: jax.Array,        # (T, B, L) table-local row ids
+    lengths: Optional[jax.Array] = None,   # (T, B)
+    weights: Optional[jax.Array] = None,   # (T, B, L)
+    *,
+    combiner: str = "sum",
+) -> jax.Array:
+    """Table-batched oracle: per-table :func:`embedding_bag_ref`, stacked.
+
+    Returns (T, B, D) — the reference the fused TBE kernel is swept against.
+    """
+    T, B, L = indices.shape
+    lens = lengths if lengths is not None else jnp.full((T, B), L, jnp.int32)
+    if weights is None:
+        fn = lambda t, i, ln: embedding_bag_ref(t, i, ln, combiner=combiner)
+        return jax.vmap(fn)(tables, indices, lens)
+    fn = lambda t, i, ln, w: embedding_bag_ref(t, i, ln, w, combiner=combiner)
+    return jax.vmap(fn)(tables, indices, lens, weights)
+
+
+def embedding_bag_masked_batched_ref(
+    table_shards: jax.Array,   # (T, R_shard, D)
+    row_offset,                # scalar — first global row id of the shard
+    indices: jax.Array,        # (T, B, L) GLOBAL row ids
+    lengths: Optional[jax.Array] = None,
+    weights: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Table-batched RW-partial oracle (see embedding_bag_masked_ref)."""
+    T, B, L = indices.shape
+    lens = lengths if lengths is not None else jnp.full((T, B), L, jnp.int32)
+    if weights is None:
+        fn = lambda t, i, ln: embedding_bag_masked_ref(t, row_offset, i, ln)
+        return jax.vmap(fn)(table_shards, indices, lens)
+    fn = lambda t, i, ln, w: embedding_bag_masked_ref(t, row_offset, i, ln, w)
+    return jax.vmap(fn)(table_shards, indices, lens, weights)
+
+
 def embedding_onehot_ref(
     table: jax.Array,          # (R, D)
     indices: jax.Array,        # (B, L)

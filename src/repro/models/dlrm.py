@@ -15,7 +15,7 @@ from typing import Any, Dict, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.utils.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro.configs.dlrm import DLRMConfig

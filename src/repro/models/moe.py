@@ -19,6 +19,8 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.utils.compat import axis_size
+
 from repro.configs.base import ModelConfig
 from repro.core import routing
 from repro.models import layers
@@ -129,7 +131,7 @@ def moe_ffn_ep(p, x: jax.Array, cfg: ModelConfig, axis: str):
     the paper's permute pipeline: bucket-by-owner -> all_to_all -> local
     compute -> inverse all_to_all -> weighted combine (segment-sum).
     """
-    n_ranks = jax.lax.axis_size(axis)
+    n_ranks = axis_size(axis)
     N, d = x.shape
     k = cfg.experts_per_token
     E = cfg.num_experts

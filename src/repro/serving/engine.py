@@ -1,11 +1,17 @@
-"""Batched inference engine: prefill + decode with continuous batching.
+"""Batched inference engines.
 
-``generate`` is the simple API (one batch of prompts, greedy/temperature).
-``ContinuousBatcher`` is the serving loop: a fixed pool of cache slots at
-possibly different lengths (per-sample ``length`` in the cache); finished
-sequences are evicted and queued requests admitted by overwriting the
-slot's cache lines — the decode step itself is one jitted function whose
-shape never changes, so admission/eviction never recompiles.
+LM serving: ``generate`` is the simple API (one batch of prompts,
+greedy/temperature); ``ContinuousBatcher`` is the serving loop: a fixed
+pool of cache slots at possibly different lengths (per-sample ``length``
+in the cache); finished sequences are evicted and queued requests admitted
+by overwriting the slot's cache lines — the decode step itself is one
+jitted function whose shape never changes, so admission/eviction never
+recompiles.
+
+DLRM serving: ``DLRMEngine`` micro-batches CTR scoring requests into one
+fixed-shape jitted forward whose embedding pooling runs the fused
+table-batched (TBE) kernel — one ``pallas_call`` per batch for all 26
+Criteo-like tables instead of 26 launches (the paper's #tables axis).
 """
 from __future__ import annotations
 
@@ -17,8 +23,11 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
+from repro.configs.dlrm import DLRMConfig
+from repro.core.jagged import JaggedBatch
 from repro.core.parallel import ParallelContext
 from repro.models import decode as dec
+from repro.models import dlrm as dlrm_mod
 from repro.models import lm
 
 
@@ -167,3 +176,81 @@ class ContinuousBatcher:
                 break
             steps += 1
         return self.done
+
+
+# ---------------------------------------------------------------------------
+# DLRM CTR scoring engine (fused-TBE consumer)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class CTRRequest:
+    """One scoring request: dense features + per-table sparse lookups."""
+    rid: int
+    dense: np.ndarray          # (num_dense_features,)
+    indices: np.ndarray        # (T, L) table-local row ids (padded)
+    lengths: np.ndarray        # (T,) valid lookups per table
+
+
+class DLRMEngine:
+    """Micro-batching CTR inference over the DLRM forward.
+
+    Requests accumulate in a queue; ``flush`` pads them to the engine's
+    fixed ``batch_size`` and runs ONE jitted forward — the embedding
+    pooling inside is the fused TBE path (``cfg.fused``), so every flush
+    costs a single gather kernel launch regardless of the table count.
+    Fixed shapes mean the forward compiles exactly once.
+    """
+
+    def __init__(self, params, cfg: DLRMConfig, batch_size: int,
+                 ctx: Optional[ParallelContext] = None):
+        self.params, self.cfg, self.ctx = params, cfg, ctx
+        self.batch_size = batch_size
+        self.queue: List[CTRRequest] = []
+
+        def fwd(p, dense, batch):
+            return jax.nn.sigmoid(
+                dlrm_mod.forward(p, dense, batch, cfg, ctx))
+
+        self._fwd = jax.jit(fwd)
+
+    def submit(self, req: CTRRequest):
+        T = self.cfg.num_sparse_features
+        L = self.cfg.pooling
+        F = self.cfg.num_dense_features
+        # validate every field here: flush() pops requests before scoring,
+        # so a shape error there would silently drop the whole micro-batch
+        if (req.dense.shape != (F,) or req.indices.shape != (T, L)
+                or req.lengths.shape != (T,)):
+            raise ValueError(
+                f"request {req.rid}: want dense ({F},) / indices ({T}, {L})"
+                f" / lengths ({T},), got {req.dense.shape} / "
+                f"{req.indices.shape} / {req.lengths.shape}")
+        self.queue.append(req)
+
+    def flush(self) -> Dict[int, float]:
+        """Score up to ``batch_size`` queued requests; returns rid -> pCTR."""
+        if not self.queue:
+            return {}
+        todo = self.queue[: self.batch_size]
+        self.queue = self.queue[self.batch_size:]
+        B = self.batch_size
+        T, L = self.cfg.num_sparse_features, self.cfg.pooling
+        F = self.cfg.num_dense_features
+
+        dense = np.zeros((B, F), np.float32)
+        idx = np.zeros((T, B, L), np.int32)
+        lens = np.zeros((T, B), np.int32)
+        for i, req in enumerate(todo):    # pad tail slots stay all-masked
+            dense[i] = req.dense
+            idx[:, i, :] = req.indices
+            lens[:, i] = req.lengths
+        batch = JaggedBatch(indices=jnp.asarray(idx),
+                            lengths=jnp.asarray(lens))
+        p = np.asarray(self._fwd(self.params, jnp.asarray(dense), batch))
+        return {req.rid: float(p[i]) for i, req in enumerate(todo)}
+
+    def run_to_completion(self) -> Dict[int, float]:
+        out: Dict[int, float] = {}
+        while self.queue:
+            out.update(self.flush())
+        return out

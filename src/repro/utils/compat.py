@@ -1,0 +1,65 @@
+"""Version compatibility shims.
+
+``shard_map`` was promoted out of ``jax.experimental`` (and its
+``check_rep`` kwarg renamed ``check_vma``) in jax 0.6; this repo targets
+the new spelling but must run on the pinned 0.4.x toolchain. Import it
+from here everywhere:
+
+    from repro.utils.compat import shard_map
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import inspect
+import warnings
+
+import jax as _jax
+from jax.experimental.pallas import tpu as _pltpu
+
+try:  # jax >= 0.6: public API, kwarg is check_vma
+    from jax import shard_map as _shard_map
+except ImportError:  # jax 0.4.x: experimental API, kwarg is check_rep
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+# pltpu.TPUCompilerParams (0.4.x) was renamed pltpu.CompilerParams (>= 0.6)
+# and grew fields (e.g. has_side_effects) along the way — construct through
+# a filter so kernels can use the new spelling on old toolchains.
+_CompilerParamsCls = getattr(_pltpu, "CompilerParams", None) or \
+    _pltpu.TPUCompilerParams
+_COMPILER_PARAM_FIELDS = {
+    f.name for f in dataclasses.fields(_CompilerParamsCls)}
+_warned_dropped_params = set()
+
+
+def CompilerParams(**kwargs):
+    dropped = set(kwargs) - _COMPILER_PARAM_FIELDS - _warned_dropped_params
+    if dropped:
+        # e.g. has_side_effects on 0.4.x: the kernel compiles as pure, so
+        # XLA may CSE/elide calls whose effects (remote DMAs) it can't see.
+        # Interpret-mode runs are unaffected; flag it for hardware runs.
+        _warned_dropped_params.update(dropped)
+        warnings.warn(
+            f"pltpu compiler params {sorted(dropped)} unsupported by "
+            f"installed jax {_jax.__version__} and dropped — kernel "
+            "semantics relying on them are not guaranteed on this "
+            "toolchain", stacklevel=2)
+    return _CompilerParamsCls(**{
+        k: v for k, v in kwargs.items() if k in _COMPILER_PARAM_FIELDS})
+
+if hasattr(_jax.lax, "axis_size"):
+    axis_size = _jax.lax.axis_size
+else:
+    def axis_size(axis_name):
+        """jax.lax.axis_size for 0.4.x: psum of a literal folds to a
+        static Python int via the axis env."""
+        return _jax.lax.psum(1, axis_name)
+
+_ACCEPTS_CHECK_VMA = "check_vma" in inspect.signature(_shard_map).parameters
+
+
+@functools.wraps(_shard_map)
+def shard_map(f, /, *args, **kwargs):
+    if not _ACCEPTS_CHECK_VMA and "check_vma" in kwargs:
+        kwargs["check_rep"] = kwargs.pop("check_vma")
+    return _shard_map(f, *args, **kwargs)

@@ -13,7 +13,7 @@ import sys
 import numpy as np
 import jax
 import jax.numpy as jnp
-from jax import shard_map
+from repro.utils.compat import shard_map
 from jax.sharding import PartitionSpec as P
 
 from repro import configs

@@ -1,0 +1,90 @@
+"""Minimal stand-in for the `hypothesis` API surface this suite uses.
+
+Installed into ``sys.modules`` by ``conftest.py`` ONLY when the real
+library is absent (the pinned CPU container does not ship it; CI does).
+It implements deterministic pseudo-random example generation for:
+
+    given, settings, strategies.{integers, lists, data, randoms}
+
+No shrinking, no database — just N seeded examples per test, which keeps
+the property tests meaningful as regression checks without the dep.
+"""
+from __future__ import annotations
+
+import random as _random
+import types
+import zlib
+
+DEFAULT_EXAMPLES = 20
+
+
+class _Strategy:
+    def __init__(self, draw_fn):
+        self._draw = draw_fn
+
+
+def integers(min_value, max_value):
+    return _Strategy(lambda r: r.randint(min_value, max_value))
+
+
+def lists(elements, min_size=0, max_size=10):
+    def draw(r):
+        n = r.randint(min_size, max_size)
+        return [elements._draw(r) for _ in range(n)]
+    return _Strategy(draw)
+
+
+def randoms():
+    return _Strategy(lambda r: _random.Random(r.randint(0, 2 ** 31 - 1)))
+
+
+class _DataObject:
+    def __init__(self, rnd):
+        self._rnd = rnd
+
+    def draw(self, strategy, label=None):
+        return strategy._draw(self._rnd)
+
+
+def data():
+    s = _Strategy(lambda r: _DataObject(r))
+    s.is_data = True
+    return s
+
+
+def settings(**kwargs):
+    def deco(fn):
+        fn._stub_max_examples = kwargs.get("max_examples", DEFAULT_EXAMPLES)
+        return fn
+    return deco
+
+
+def given(*strategies_args):
+    def deco(fn):
+        # zero-arg wrapper so pytest doesn't mistake drawn params for fixtures
+        def wrapper():
+            n = getattr(wrapper, "_stub_max_examples", DEFAULT_EXAMPLES)
+            rnd = _random.Random(zlib.crc32(fn.__name__.encode()))
+            for _ in range(n):
+                fn(*[s._draw(rnd) for s in strategies_args])
+        wrapper.__name__ = fn.__name__
+        wrapper.__doc__ = fn.__doc__
+        wrapper.__module__ = fn.__module__
+        return wrapper
+    return deco
+
+
+def build_modules():
+    """Create (hypothesis, hypothesis.strategies) module objects."""
+    strategies = types.ModuleType("hypothesis.strategies")
+    strategies.integers = integers
+    strategies.lists = lists
+    strategies.randoms = randoms
+    strategies.data = data
+
+    hyp = types.ModuleType("hypothesis")
+    hyp.given = given
+    hyp.settings = settings
+    hyp.strategies = strategies
+    hyp.__stub__ = True
+    return hyp, strategies

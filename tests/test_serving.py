@@ -57,3 +57,63 @@ def test_batcher_slot_reuse(setup):
     done = eng.run_to_completion()
     assert len(done) == 3
     assert all(len(r.generated) == 3 for r in done.values())
+
+
+# ---------------------------------------------------------------------------
+# DLRM CTR scoring engine (fused-TBE consumer)
+# ---------------------------------------------------------------------------
+
+def test_dlrm_engine_scores_match_direct_forward():
+    import dataclasses
+
+    from repro.configs import dlrm as dlrm_cfg
+    from repro.core.jagged import JaggedBatch
+    from repro.models import dlrm as dlrm_mod
+    from repro.serving.engine import CTRRequest, DLRMEngine
+
+    cfg = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="interpret")
+    params = dlrm_mod.init_params(jax.random.key(0), cfg)
+    T, L, F = cfg.num_sparse_features, cfg.pooling, cfg.num_dense_features
+
+    rng = np.random.default_rng(0)
+    reqs = [CTRRequest(
+        rid=rid,
+        dense=rng.standard_normal(F).astype(np.float32),
+        indices=rng.integers(0, cfg.rows_per_table, (T, L)).astype(np.int32),
+        lengths=rng.integers(1, L + 1, (T,)).astype(np.int32),
+    ) for rid in range(5)]
+
+    eng = DLRMEngine(params, cfg, batch_size=3)   # 5 reqs -> 2 flushes
+    for r in reqs:
+        eng.submit(r)
+    scores = eng.run_to_completion()
+    assert sorted(scores) == [0, 1, 2, 3, 4]
+    assert all(0.0 < s < 1.0 for s in scores.values())
+
+    # each score equals an unbatched direct forward of that request
+    for r in reqs[:2]:
+        batch = JaggedBatch(
+            indices=jnp.asarray(r.indices[:, None, :]),
+            lengths=jnp.asarray(r.lengths[:, None]))
+        direct = jax.nn.sigmoid(dlrm_mod.forward(
+            params, jnp.asarray(r.dense[None]), batch, cfg))
+        np.testing.assert_allclose(scores[r.rid], float(direct[0]),
+                                   atol=1e-5, rtol=1e-5)
+
+
+def test_dlrm_engine_rejects_bad_shapes():
+    import dataclasses
+
+    from repro.configs import dlrm as dlrm_cfg
+    from repro.models import dlrm as dlrm_mod
+    from repro.serving.engine import CTRRequest, DLRMEngine
+
+    cfg = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference")
+    params = dlrm_mod.init_params(jax.random.key(0), cfg)
+    eng = DLRMEngine(params, cfg, batch_size=2)
+    with pytest.raises(ValueError):
+        eng.submit(CTRRequest(
+            rid=0,
+            dense=np.zeros(cfg.num_dense_features, np.float32),
+            indices=np.zeros((1, 1), np.int32),
+            lengths=np.zeros((1,), np.int32)))
