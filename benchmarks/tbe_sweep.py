@@ -18,6 +18,7 @@ CSV: sweep,value,path,phase,platform,us,launches,mode
 """
 from __future__ import annotations
 
+import argparse
 import io
 import time
 
@@ -73,14 +74,14 @@ def measure(T: int, fused: bool, mode: str, reps: int) -> float:
     return (time.perf_counter() - t0) / reps
 
 
-def run() -> str:
+def run(table_counts=None, max_reps: int = 3) -> str:
     out = io.StringIO()
     print("sweep,value,path,phase,platform,us,launches,mode", file=out)
     on_tpu = jax.default_backend() == "tpu"
     kernel_mode = "pallas" if on_tpu else "interpret"
     measured_tag = kernel_mode if on_tpu else "interpret-emulation"
 
-    for T in TABLE_COUNTS:
+    for T in (table_counts or TABLE_COUNTS):
         w = EmbeddingWorkload(num_tables=T, **PAPER)
         for fused in (True, False):
             path = "fused" if fused else "per_table"
@@ -93,7 +94,7 @@ def run() -> str:
                 print(f"tables,{T},{path},total,{hw.name},"
                       f"{sum(phases.values())*1e6:.3f},{launches},modeled",
                       file=out)
-            reps = 1 if (not on_tpu and fused and T >= 16) else 3
+            reps = 1 if (not on_tpu and fused and T >= 16) else max_reps
             t = measure(T, fused, kernel_mode, reps)
             print(f"tables,{T},{path},total,{jax.default_backend()},"
                   f"{t*1e6:.1f},{launches},{measured_tag}", file=out)
@@ -101,7 +102,13 @@ def run() -> str:
 
 
 def main():
-    csv = run()
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--smoke", action="store_true",
+                    help="T in {1, 4}, single rep — the CI rot check")
+    args = ap.parse_args()
+    counts = [1, 4] if args.smoke else TABLE_COUNTS
+
+    csv = run(counts, max_reps=1 if args.smoke else 3)
     print(csv)
     import csv as _csv
 
@@ -109,14 +116,15 @@ def main():
     launches = {(int(r["value"]), r["path"]): int(r["launches"])
                 for r in rows}
     # structural win: fused is ONE launch at every T; per-table pays T
-    flat = all(launches[(T, "fused")] == 1 for T in TABLE_COUNTS)
-    linear = all(launches[(T, "per_table")] == T for T in TABLE_COUNTS)
+    flat = all(launches[(T, "fused")] == 1 for T in counts)
+    linear = all(launches[(T, "per_table")] == T for T in counts)
     print(f"# fused launches == 1 for all T: {flat}; "
           f"per-table launches == T: {linear}")
+    assert flat and linear, "TBE launch-count invariant broken"
     modeled = {(int(r["value"]), r["path"]): float(r["us"]) for r in rows
                if r["mode"] == "modeled" and r["phase"] == "total"
                and r["platform"] == "h100-dgx-nvlink"}
-    for T in TABLE_COUNTS:
+    for T in counts:
         s = modeled[(T, "per_table")] / modeled[(T, "fused")]
         print(f"# modeled H100 gather-phase speedup @T={T}: {s:.2f}x")
 

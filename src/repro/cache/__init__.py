@@ -1,0 +1,63 @@
+"""Tiered frequency-aware embedding cache (the PR-2 subsystem).
+
+Design note (mirrors the TBE note in kernels/embedding_gather.py)
+-----------------------------------------------------------------
+
+The paper's premise is that DLRM tables outgrow HBM, forcing the
+row-wise partitioning whose permute/reduce-scatter phases it dissects
+(§4.2) and whose 22.8x-108.2x slowdown it projects (Fig. 9).  CTR
+traffic, however, is zipfian: a ~1% working set absorbs ~90% of lookups
+(RecShard, capacity-driven scale-out inference — PAPERS.md), so a small
+HBM-resident hot tier over host-resident cold tables trades most of that
+distributed traffic for an occasional host->device row fetch.  This
+package is that tier, modeled on hpcaitech/CacheEmbedding's
+``chunk_param_mgr``/``freq_aware_embedding`` but at row (not chunk)
+granularity and with JAX's functional-update discipline:
+
+  * three host-side structures (manager.py): an id->slot INDIRECTION
+    table per embedding table, the reverse slot->id map, and persistent
+    per-row frequency counters driving LFU admission-eviction (LRU via
+    per-slot touch ticks);
+  * a fixed ``(T, S, D)`` device SLOT POOL (cached_bag.py) updated by
+    one flat scatter per prefetch — never reallocated, so the jitted
+    consumer recompiles exactly once;
+  * an explicit two-step serving protocol: ``prefetch(batch)`` pins the
+    batch's working set device-side and returns slot-remapped indices;
+    the lookup then runs the SAME fused TBE ``pallas_call`` as the
+    uncached path over the pool — the cache lives entirely in the index
+    remap, the hot path stays one kernel launch;
+  * ``CacheStats`` (stats.py): hits/misses/evictions/hit-rate/bytes
+    moved, with per-lookup counting semantics documented there and
+    cross-checked against a numpy simulation in tests/test_cache.py.
+
+Exactness contract: after ``prefetch``, the pooled output is bitwise
+equal to the uncached oracle (same kernel, same summation order, same
+row payloads) — eviction only ever changes WHERE a row is served from.
+
+Integration points: ``EmbeddingBagConfig.cache_rows/cache_policy``,
+``pooled_lookup_cached`` (core/embedding_bag.py),
+``DLRMEngine`` prefetch-at-flush (serving/engine.py), hit-rate
+parameterized projections (core/perf_model.py), and the zipf sweep in
+benchmarks/cache_sweep.py.
+
+Open direction (ROADMAP.md): multi-host tiering — the cold tier behind
+a remote fetch instead of local host memory — and planner-aware cache
+sizing (sharding_plan.py choosing cache_rows against the HBM budget).
+"""
+from repro.cache.cached_bag import CachedEmbeddingBag
+from repro.cache.manager import (
+    POLICIES,
+    CacheCapacityError,
+    PrefetchPlan,
+    SlotPoolManager,
+)
+from repro.cache.stats import CacheStats
+
+__all__ = [
+    "CachedEmbeddingBag",
+    "CacheCapacityError",
+    "CacheStats",
+    "PrefetchPlan",
+    "SlotPoolManager",
+    "POLICIES",
+]

@@ -1,0 +1,162 @@
+"""``CachedEmbeddingBag`` — tiered lookup: HBM slot pool over host tables.
+
+The full ``(T, R, D)`` tables live host-resident (numpy, the cold tier);
+a fixed ``(T, S, D)`` device slot pool (the hot tier) holds the rows the
+:class:`repro.cache.manager.SlotPoolManager` decided to cache.  The
+serving protocol is two explicit steps:
+
+  1. ``prefetch(batch)`` — host-side: admit the batch's working set
+     (copying missing rows host->device in ONE scatter), update the
+     LFU/LRU state and :class:`CacheStats`, and return the batch with
+     ids remapped to pool slots;
+  2. ``lookup(batch)`` / ``device_lookup(...)`` — device-side: one fused
+     TBE ``pallas_call`` over the slot pool, identical kernel to the
+     uncached ``pooled_lookup_local`` path (the slot remap happens in the
+     indices, not the kernel), so the hot path stays one launch.
+
+Exactness: after ``prefetch`` every valid lookup's row is pool-resident
+and the pooled output is BITWISE equal to the uncached oracle — same
+kernel, same weights, same summation order, same row payloads.
+"""
+from __future__ import annotations
+
+import functools
+import warnings
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cache.manager import SlotPoolManager
+from repro.cache.stats import CacheStats
+from repro.core.embedding_bag import EmbeddingBagConfig
+from repro.core.jagged import JaggedBatch
+from repro.kernels import ops as kops
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(pool: jax.Array, addr: jax.Array,
+                  rows: jax.Array) -> jax.Array:
+    """Write fetched rows into the pool at flat addresses ``t*S + slot``.
+
+    Jitted with the pool DONATED so accelerator backends update the
+    buffer in place — O(M*D) HBM writes per prefetch, not an O(T*S*D)
+    whole-pool copy (an eager ``.at[].set`` cannot alias its input).
+    """
+    T, S, D = pool.shape
+    return pool.reshape(T * S, D).at[addr].set(rows).reshape(T, S, D)
+
+
+class CachedEmbeddingBag:
+    def __init__(self, tables, cfg: EmbeddingBagConfig, *,
+                 cache_rows: Optional[int] = None,
+                 policy: Optional[str] = None):
+        if cfg.combiner not in ("sum", "mean"):
+            raise NotImplementedError(
+                f"CachedEmbeddingBag: combiner {cfg.combiner!r} "
+                f"(EmbeddingBagConfig.combiner) is not supported")
+        self.cfg = cfg
+        self.host = np.asarray(tables)          # cold tier, (T, R, D)
+        if self.host.ndim != 3:
+            raise ValueError(f"tables must be (T, R, D), got "
+                             f"{self.host.shape}")
+        T, R, D = self.host.shape
+        S = int(cache_rows if cache_rows is not None else cfg.cache_rows)
+        if S <= 0:
+            raise ValueError(
+                "cache_rows must be > 0 to build a CachedEmbeddingBag "
+                "(set EmbeddingBagConfig.cache_rows or pass cache_rows=)")
+        self.mgr = SlotPoolManager(T, R, S,
+                                   policy if policy is not None
+                                   else cfg.cache_policy)
+        self.pool = jnp.zeros((T, self.mgr.S, D), self.host.dtype)  # hot tier
+        self.stats = CacheStats()
+        self.row_bytes = D * self.host.dtype.itemsize
+
+    # -- tier-1 protocol: prefetch then lookup -------------------------------
+
+    def prefetch_arrays(self, indices: np.ndarray,
+                        lengths: Optional[np.ndarray]) -> np.ndarray:
+        """Host-array prefetch: (T, B, L) ids -> (T, B, L) pool slots.
+
+        Pulls every missing row of the batch host->device (one flat
+        scatter into the pool), updates stats, and returns the
+        slot-remapped indices.  ``lengths`` None means every slot valid.
+        """
+        indices = np.asarray(indices)
+        if lengths is None:
+            valid = np.ones(indices.shape, bool)
+        else:
+            L = indices.shape[-1]
+            valid = np.arange(L) < np.asarray(lengths)[..., None]
+        plan = self.mgr.prepare(indices, valid)
+        if plan.fetch_rows.size:
+            S = self.pool.shape[1]
+            try:
+                rows = self.host[plan.fetch_tables, plan.fetch_rows]  # (M, D)
+                addr = plan.fetch_tables.astype(np.int64) * S \
+                    + plan.fetch_slots
+                # pad M to the next power of two (idempotent duplicates of
+                # the last write) so _scatter_rows compiles O(log M_max)
+                # shapes, not one per distinct miss count
+                pad = (1 << (addr.size - 1).bit_length()) - addr.size
+                if pad:
+                    addr = np.concatenate([addr, np.repeat(addr[-1:], pad)])
+                    rows = np.concatenate(
+                        [rows, np.repeat(rows[-1:], pad, axis=0)])
+                with warnings.catch_warnings():
+                    # CPU backends skip donation with a warning; harmless
+                    warnings.simplefilter("ignore")
+                    self.pool = _scatter_rows(
+                        self.pool, jnp.asarray(addr), jnp.asarray(rows))
+            except BaseException:
+                # keep metadata honest: prepare() admitted these rows but
+                # their payload never reached the pool
+                self.mgr.invalidate_fetch(plan)
+                raise
+        self.stats.update(hits=plan.hits, misses=plan.misses,
+                          evictions=plan.evictions,
+                          bytes_h2d=plan.fetch_rows.size * self.row_bytes)
+        return plan.remapped
+
+    def prefetch(self, batch: JaggedBatch) -> JaggedBatch:
+        """Admit ``batch``'s working set; return the slot-remapped batch."""
+        remapped = self.prefetch_arrays(
+            np.asarray(batch.indices),
+            None if batch.lengths is None else np.asarray(batch.lengths))
+        return JaggedBatch(jnp.asarray(remapped), batch.lengths,
+                           batch.weights)
+
+    def device_lookup(self, pool: jax.Array, indices: jax.Array,
+                      lengths: Optional[jax.Array],
+                      weights: Optional[jax.Array]) -> jax.Array:
+        """Pure hot-path: (T, S, D) pool x (T, B, L) slot ids -> (B, T, D).
+
+        One fused TBE ``pallas_call`` (jit/jaxpr-safe: no host state)."""
+        out = kops.embedding_bag_batched(
+            pool, indices, lengths, weights,
+            combiner=self.cfg.combiner, mode=self.cfg.kernel_mode,
+            fused=self.cfg.fused)                            # (T, B, D)
+        return out.transpose(1, 0, 2)
+
+    def lookup(self, batch: JaggedBatch, *,
+               prefetched: bool = False) -> jax.Array:
+        """Tiered pooled lookup, drop-in for ``pooled_lookup_local``.
+
+        Pass ``prefetched=True`` when ``batch`` already came out of
+        :meth:`prefetch` (its ids are pool slots, not row ids)."""
+        if not prefetched:
+            batch = self.prefetch(batch)
+        return self.device_lookup(self.pool, batch.indices, batch.lengths,
+                                  batch.weights)
+
+    # -- introspection -------------------------------------------------------
+
+    @property
+    def cache_ratio(self) -> float:
+        return self.mgr.S / self.mgr.R
+
+    @property
+    def pool_bytes(self) -> int:
+        return int(self.pool.size) * self.host.dtype.itemsize

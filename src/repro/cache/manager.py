@@ -1,0 +1,185 @@
+"""Host-side slot-pool state machine: id->slot indirection + LFU/LRU.
+
+``SlotPoolManager`` owns the *metadata* of the tiered cache — which table
+row occupies which HBM slot — and decides admission/eviction per batch.
+It never touches device memory: :meth:`prepare` returns a
+:class:`PrefetchPlan` naming the rows to copy host->device and the
+slot-remapped index tensor; :class:`repro.cache.CachedEmbeddingBag`
+executes the copy and the kernel.
+
+State (all numpy, vectorized across rows; a small python loop over the
+T tables):
+
+  * ``slot_of_id (T, R) int32`` — the indirection table: row id -> pool
+    slot, -1 when the row is host-only.  Device lookups remap through it.
+  * ``id_of_slot (T, S) int64`` — reverse map, -1 for free slots.
+  * ``freq (T, R) int64``       — per-row batch-frequency counters,
+    accumulated over every prefetch (they PERSIST across eviction, so a
+    re-admitted hot row keeps its rank — CacheEmbedding's
+    ``ids_freq_mapping`` made dynamic).
+  * ``last_used (T, S) int64``  — per-slot touch tick for LRU.
+
+Eviction (policy "lfu"): victim = resident slot whose row has the
+smallest frequency counter.  Policy "lru": victim = slot with the oldest
+touch tick.  Rows referenced by the *current* batch are pinned for the
+duration of the call (the evict backlist), so a batch whose working set
+fits in the pool can always be made fully resident.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+POLICIES = ("lfu", "lru")
+
+
+class CacheCapacityError(RuntimeError):
+    """A batch's unique working set exceeds the slot pool.
+
+    Dedicated type so callers (DLRMEngine's micro-batch splitter) can
+    react to THIS condition without swallowing unrelated RuntimeErrors
+    (e.g. a device OOM during the pool copy)."""
+
+
+@dataclasses.dataclass
+class PrefetchPlan:
+    """One batch's cache actions, to be applied by the owning bag."""
+
+    remapped: np.ndarray     # (T, B, L) int32 slot ids (non-resident -> 0)
+    fetch_tables: np.ndarray  # (M,) int32 table of each row to copy h->d
+    fetch_rows: np.ndarray    # (M,) int64 host row id of each copied row
+    fetch_slots: np.ndarray   # (M,) int64 destination slot of each row
+    hits: int = 0             # per-lookup (see stats.py counting semantics)
+    misses: int = 0
+    evictions: int = 0
+
+
+class SlotPoolManager:
+    def __init__(self, num_tables: int, rows: int, slots: int,
+                 policy: str = "lfu"):
+        if policy not in POLICIES:
+            raise ValueError(
+                f"unknown cache_policy {policy!r}; pick one of {POLICIES}")
+        if slots <= 0:
+            raise ValueError(f"slot pool must be positive, got {slots}")
+        self.T, self.R, self.S = num_tables, rows, min(slots, rows)
+        self.policy = policy
+        self.slot_of_id = np.full((self.T, self.R), -1, np.int32)
+        self.id_of_slot = np.full((self.T, self.S), -1, np.int64)
+        self.freq = np.zeros((self.T, self.R), np.int64)
+        self.last_used = np.full((self.T, self.S), -1, np.int64)
+        self.tick = 0
+
+    @property
+    def resident_rows(self) -> int:
+        return int((self.id_of_slot >= 0).sum())
+
+    def prepare(self, indices: np.ndarray, valid: np.ndarray) -> PrefetchPlan:
+        """Admit this batch's working set; return the slot remap + fetches.
+
+        Args:
+          indices: (T, B, L) table-local row ids (padding slots arbitrary).
+          valid:   (T, B, L) bool — True where the lookup is within-length.
+        """
+        T, S = self.T, self.S
+        indices = np.asarray(indices)
+        valid = np.asarray(valid, bool)
+        plan_t, plan_r, plan_s = [], [], []
+        hits = misses = evictions = 0
+        remapped = np.zeros(indices.shape, np.int32)
+
+        # Validate EVERY table before mutating ANY state: prepare must be
+        # atomic — a mid-loop raise after table 0's admissions would leave
+        # slot_of_id claiming rows whose payload the bag never copied, and
+        # later lookups would silently serve stale pool slots.
+        per_table = []
+        for t in range(T):
+            ids_t = indices[t][valid[t]].astype(np.int64)
+            if ids_t.size and (ids_t.min() < 0 or ids_t.max() >= self.R):
+                raise IndexError(
+                    f"table {t}: lookup ids outside [0, {self.R})")
+            uniq, counts = np.unique(ids_t, return_counts=True)
+            if uniq.size > S:
+                raise CacheCapacityError(
+                    f"table {t}: batch working set ({uniq.size} unique rows)"
+                    f" exceeds the slot pool ({S} slots) — raise"
+                    f" EmbeddingBagConfig.cache_rows or shrink the batch")
+            per_table.append((uniq, counts))
+
+        for t in range(T):
+            uniq, counts = per_table[t]
+            self.freq[t, uniq] += counts
+
+            slots_u = self.slot_of_id[t, uniq]
+            resident = slots_u >= 0
+            hits += int(counts[resident].sum())
+            misses += int(counts[~resident].sum())
+            miss_ids = uniq[~resident]
+
+            if miss_ids.size:
+                free = np.flatnonzero(self.id_of_slot[t] < 0)
+                need = miss_ids.size - free.size
+                if need > 0:
+                    victims = self._pick_victims(t, need, slots_u[resident])
+                    evicted = self.id_of_slot[t, victims]
+                    self.slot_of_id[t, evicted] = -1
+                    self.id_of_slot[t, victims] = -1
+                    evictions += need
+                    free = np.concatenate([free, victims])
+                target = free[: miss_ids.size]
+                self.slot_of_id[t, miss_ids] = target
+                self.id_of_slot[t, target] = miss_ids
+                plan_t.append(np.full(miss_ids.size, t, np.int32))
+                plan_r.append(miss_ids)
+                plan_s.append(target.astype(np.int64))
+
+            # LRU touch: every slot referenced by this batch (hit or fresh)
+            self.last_used[t, self.slot_of_id[t, uniq]] = self.tick
+
+            slot = self.slot_of_id[t, np.clip(indices[t], 0, self.R - 1)]
+            remapped[t] = np.where(slot >= 0, slot, 0)
+
+        self.tick += 1
+        cat = lambda xs, dt: (np.concatenate(xs) if xs
+                              else np.zeros((0,), dt))
+        return PrefetchPlan(
+            remapped=remapped,
+            fetch_tables=cat(plan_t, np.int32),
+            fetch_rows=cat(plan_r, np.int64),
+            fetch_slots=cat(plan_s, np.int64),
+            hits=hits, misses=misses, evictions=evictions,
+        )
+
+    def _pick_victims(self, t: int, need: int,
+                      pinned_slots: np.ndarray) -> np.ndarray:
+        """``need`` occupied slots to reclaim, never one pinned by the
+        current batch."""
+        if self.policy == "lfu":
+            # score each slot by its row's persistent frequency counter
+            occ = self.id_of_slot[t]
+            scores = self.freq[t, np.clip(occ, 0, self.R - 1)].astype(
+                np.float64)
+        else:
+            scores = self.last_used[t].astype(np.float64)
+        scores[self.id_of_slot[t] < 0] = np.inf   # free slots aren't victims
+        scores[pinned_slots] = np.inf             # the evict backlist
+        victims = np.argpartition(scores, need - 1)[:need]
+        if not np.isfinite(scores[victims]).all():
+            raise RuntimeError(
+                f"table {t}: cannot evict {need} rows — the current batch"
+                f" pins the whole pool")
+        return victims
+
+    def invalidate_fetch(self, plan: PrefetchPlan) -> None:
+        """Undo the residency of ``plan``'s fetched rows — called by the
+        bag when the host->device payload copy fails after prepare()
+        committed the metadata, so no slot ever claims an uncopied row.
+        (Evictions stand — the victims really are gone from the pool.)"""
+        self.slot_of_id[plan.fetch_tables, plan.fetch_rows] = -1
+        self.id_of_slot[plan.fetch_tables, plan.fetch_slots] = -1
+
+    def resident_ids(self, t: int) -> np.ndarray:
+        """Sorted row ids currently resident for table ``t`` (test hook)."""
+        occ = self.id_of_slot[t]
+        return np.sort(occ[occ >= 0])

@@ -1,0 +1,67 @@
+"""Cache observability: the ``CacheStats`` record.
+
+Counting semantics (matched by the numpy simulation in tests/test_cache.py):
+
+  * one *lookup* = one valid (within-``lengths``) slot of the padded
+    ``(T, B, L)`` index tensor — zero-weight lookups still gather a row,
+    so they count;
+  * a lookup HITS when its row is resident in the HBM slot pool at
+    ``prefetch`` time, before this batch's admissions, and MISSES
+    otherwise — every occurrence of a non-resident id in the batch counts
+    as a miss (the row is then admitted, so the *next* batch hits);
+  * ``evictions`` counts slot reassignments (one per victim row);
+  * ``bytes_h2d`` counts host->device row payload moved by ``prefetch``
+    (``misses_unique * dim * itemsize``) — the PCIe/host-link traffic the
+    perf model charges to ``host_Bps``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict
+
+
+@dataclasses.dataclass
+class CacheStats:
+    """Running counters for one :class:`CachedEmbeddingBag`."""
+
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    bytes_h2d: int = 0
+    batches: int = 0
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def hit_rate(self) -> float:
+        n = self.lookups
+        return self.hits / n if n else 0.0
+
+    def update(self, *, hits: int, misses: int, evictions: int,
+               bytes_h2d: int) -> None:
+        self.hits += int(hits)
+        self.misses += int(misses)
+        self.evictions += int(evictions)
+        self.bytes_h2d += int(bytes_h2d)
+        self.batches += 1
+
+    def reset(self) -> None:
+        self.hits = self.misses = self.evictions = 0
+        self.bytes_h2d = self.batches = 0
+
+    def as_dict(self) -> Dict[str, float]:
+        return {
+            "hits": self.hits,
+            "misses": self.misses,
+            "evictions": self.evictions,
+            "bytes_h2d": self.bytes_h2d,
+            "batches": self.batches,
+            "hit_rate": self.hit_rate,
+        }
+
+    def __str__(self) -> str:
+        return (f"CacheStats(hits={self.hits}, misses={self.misses}, "
+                f"hit_rate={self.hit_rate:.4f}, evictions={self.evictions}, "
+                f"bytes_h2d={self.bytes_h2d}, batches={self.batches})")

@@ -33,6 +33,10 @@ class DLRMConfig:
     dtype: str = "float32"
     kernel_mode: str = "auto"            # auto | reference | pallas | interpret
     fused: bool = True                   # table-batched (TBE) kernel path
+    # tiered frequency-aware cache (repro/cache/): HBM slot-pool rows per
+    # table over host-resident cold tables; 0 = tables fully device-resident
+    cache_rows: int = 0
+    cache_policy: str = "lfu"            # lfu | lru
 
     def __post_init__(self):
         if self.interaction == "dot" and \
@@ -53,6 +57,8 @@ class DLRMConfig:
             dtype=self.dtype,
             kernel_mode=self.kernel_mode,
             fused=self.fused,
+            cache_rows=self.cache_rows,
+            cache_policy=self.cache_policy,
         )
 
     @property

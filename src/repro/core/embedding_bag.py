@@ -79,6 +79,14 @@ class EmbeddingBagConfig:
     # replica and are EXCLUDED from the a2a/reduce-scatter pipeline —
     # see pooled_lookup_hot.
     hot_rows: int = 0
+    # --- tiered frequency-aware cache (repro/cache/) ---
+    # cache_rows: size S of the per-table HBM slot pool serving hot rows
+    # over the host-resident cold tables; 0 disables the cache path.
+    # Unlike the static hot_rows split, residency is DYNAMIC: an id->slot
+    # indirection table plus LFU/LRU admission-eviction driven by batch
+    # frequency counters — see pooled_lookup_cached / repro.cache.
+    cache_rows: int = 0
+    cache_policy: str = "lfu"        # lfu | lru
 
     @property
     def table_bytes(self) -> int:
@@ -438,8 +446,17 @@ def pooled_lookup_hot(
     they never enter the send buckets (``_bucket_by_owner`` drops
     weightless slots), so phase-1 traffic shrinks by the hot-hit rate.
     Exact: hot + cold partitions sum to the plain pooled lookup.
+
+    Combiners: both partitions are pooled with ``sum`` (partition sums are
+    additive, per-partition means are not); ``mean`` divides the combined
+    sum by the full batch's denominators, matching the oracle exactly.
     """
-    assert cfg.combiner == "sum", "hot-row split requires the sum combiner"
+    if cfg.combiner not in ("sum", "mean"):
+        raise NotImplementedError(
+            f"pooled_lookup_hot: combiner {cfg.combiner!r} "
+            f"(EmbeddingBagConfig.combiner) is not supported — the hot/cold "
+            f"split needs an additive pooling to recombine partitions")
+    sum_cfg = dataclasses.replace(cfg, combiner="sum")
     hot = cfg.hot_rows
     eff = batch.effective_weights()                          # (T, B, L)
     is_hot = (batch.indices < hot).astype(jnp.float32)
@@ -452,7 +469,35 @@ def pooled_lookup_hot(
     ).transpose(1, 0, 2)                                      # (B, T, D)
 
     cold_batch = JaggedBatch(batch.indices, batch.lengths, w_cold)
-    cold_out = pooled_lookup_sharded(table_shard, cold_batch, cfg,
+    cold_out = pooled_lookup_sharded(table_shard, cold_batch, sum_cfg,
                                      model_axis=model_axis)
-    return (hot_out.astype(jnp.float32) +
-            cold_out.astype(jnp.float32)).astype(table_shard.dtype)
+    out = hot_out.astype(jnp.float32) + cold_out.astype(jnp.float32)
+    if cfg.combiner == "mean":
+        denom = jnp.maximum(eff.sum(axis=2), 1.0)             # (T, B)
+        out = out / denom.transpose(1, 0)[:, :, None]
+    return out.astype(table_shard.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Tiered frequency-aware cache serving path (repro/cache/)
+# ---------------------------------------------------------------------------
+
+def make_cache(tables, cfg: EmbeddingBagConfig):
+    """Build the dynamic tiered cache for ``cfg`` (cache_rows > 0).
+
+    The returned :class:`repro.cache.CachedEmbeddingBag` keeps the full
+    ``tables`` host-resident and serves lookups from an HBM slot pool of
+    ``cfg.cache_rows`` rows per table — the dynamic successor of the
+    static ``hot_rows`` replica split above.
+    """
+    from repro.cache import CachedEmbeddingBag   # deferred: cache -> core
+
+    return CachedEmbeddingBag(tables, cfg)
+
+
+def pooled_lookup_cached(cache, batch: JaggedBatch) -> jax.Array:
+    """(cache, JaggedBatch) -> (B, T, D): prefetch misses, then ONE fused
+    TBE launch over the slot pool.  Drop-in for ``pooled_lookup_local``
+    when the cold tiers live off-device; exact (bitwise) once prefetched.
+    """
+    return cache.lookup(batch)

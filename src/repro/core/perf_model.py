@@ -21,6 +21,7 @@ multi-channel pipelining), which is exactly the crossover the paper measures.
 from __future__ import annotations
 
 import dataclasses
+import functools
 import math
 from typing import Dict
 
@@ -41,6 +42,7 @@ class Hardware:
     bulk: Transport                # NCCL / XLA-collective analogue
     onesided: Transport            # NVSHMEM / Pallas-RDMA analogue
     gather_overhead_s: float = 3e-6   # kernel launch + index math floor
+    host_Bps: float = 32e9         # host<->device link (PCIe / host DMA)
 
 
 # --- calibrated platforms ----------------------------------------------------
@@ -53,6 +55,7 @@ H100_DGX = Hardware(
     bulk=Transport("nccl", alpha_s=22e-6, beta_Bps=150e9),
     onesided=Transport("nvshmem", alpha_s=1.5e-6, beta_Bps=20e9),
     gather_overhead_s=1e-6,
+    host_Bps=55e9,                 # PCIe gen5 x16 sustained
 )
 
 TPU_V5E = Hardware(
@@ -62,6 +65,7 @@ TPU_V5E = Hardware(
     peak_flops=197e12,
     bulk=Transport("xla-ici", alpha_s=3e-6, beta_Bps=50e9),
     onesided=Transport("pallas-rdma", alpha_s=0.4e-6, beta_Bps=40e9),
+    host_Bps=25e9,                 # PCIe gen4-class host link
 )
 
 
@@ -187,6 +191,103 @@ def local_vs_distributed_speedup(
     local = embedding_bag_time(w, 1, hw, onesided=onesided)
     dist = embedding_bag_time(w, n, hw, onesided=onesided)
     return dist / local
+
+
+# ---------------------------------------------------------------------------
+# Tiered-cache projections (repro/cache/ — hit-rate-parameterized phases)
+# ---------------------------------------------------------------------------
+
+@functools.lru_cache(maxsize=None)
+def _gen_harmonic(n: float, a: float) -> float:
+    """H(n, a) = sum_{k=1..n} k^-a for a > 1 (exact head + integral tail)."""
+    n = int(n)
+    if n <= 0:
+        return 0.0
+    head = min(n, 1 << 16)
+    s = sum(k ** -a for k in range(1, head + 1))
+    if n > head:
+        # Euler–Maclaurin tail: integral + half-correction at both ends
+        s += (head ** (1 - a) - n ** (1 - a)) / (a - 1) \
+            - head ** -a / 2 + n ** -a / 2
+    return s
+
+
+def zipf_hit_rate(a: float, rows: int, cache_rows: int) -> float:
+    """Steady-state per-lookup hit rate of a ``cache_rows``-row LFU cache
+    under clipped-zipf(a) traffic over ``rows`` ids.
+
+    Traffic model matches ``data/jagged.random_jagged_batch(zipf_a=a)``:
+    ranks are zipf(a) with infinite support, clipped to ``rows`` — the
+    whole rank tail collapses onto the LAST row, which therefore carries
+    enough mass to be cache-resident itself.  The steady-state LFU cache
+    holds the ``cache_rows`` most frequent rows; the hit rate is their
+    probability mass.
+    """
+    if cache_rows <= 0:
+        return 0.0
+    if cache_rows >= rows or a <= 1.0:
+        return 1.0 if cache_rows >= rows else cache_rows / rows
+    zeta = _gen_harmonic(1 << 24, a) + \
+        ((1 << 24) ** (1 - a)) / (a - 1)            # ζ(a)
+    clamp = zeta - _gen_harmonic(rows - 1, a)        # mass of the last row
+    c = min(cache_rows, rows)
+    # top-c set: either the c hottest head rows, or c-1 head + clamp row
+    head_only = _gen_harmonic(c, a)
+    with_clamp = _gen_harmonic(c - 1, a) + clamp
+    return min(1.0, max(head_only, with_clamp) / zeta)
+
+
+def cached_phase_times(
+    w: EmbeddingWorkload, hw: Hardware, *, hit_rate: float
+) -> Dict[str, float]:
+    """Per-phase seconds of the tiered-cache serving path on ONE device.
+
+    ``prefetch_h2d``: the miss fraction of the batch's rows crosses the
+    host link before scoring (repro/cache prefetch protocol);
+    ``gather``: every lookup then streams from the HBM slot pool through
+    the one fused TBE launch — identical to the local gather phase.
+    The permute/reduce-scatter phases of the distributed pipeline are
+    GONE: that is the whole trade the cache makes.
+
+    Miss traffic is charged once per missed LOOKUP while the real bag
+    moves each missed ROW once (CacheStats.bytes_h2d); the two agree at
+    steady state, where misses live in the zipf tail and a cold row
+    almost never repeats within a batch — for cold caches this is an
+    upper bound on the transfer.
+    """
+    lookups = w.batch_per_device * w.num_tables * w.pooling
+    row_bytes = w.dim * w.dtype_bytes
+    miss_bytes = (1.0 - hit_rate) * lookups * row_bytes
+    prefetch = 0.0
+    if miss_bytes > 0:
+        prefetch = hw.gather_overhead_s + miss_bytes / hw.host_Bps
+    return {
+        "prefetch_h2d": prefetch,
+        "gather": hw.gather_overhead_s + lookups * row_bytes / hw.hbm_Bps,
+    }
+
+
+def cached_embedding_bag_time(
+    w: EmbeddingWorkload, hw: Hardware, *, hit_rate: float
+) -> float:
+    return sum(cached_phase_times(w, hw, hit_rate=hit_rate).values())
+
+
+def cache_speedup_vs_distributed(
+    table_bytes: float, w: EmbeddingWorkload, hw: Hardware, *,
+    hit_rate: float, onesided: bool = False,
+) -> float:
+    """Fig. 9 extension: one cached device vs the N-device RW pipeline.
+
+    The paper projects a 22.8x-108.2x slowdown when a table spans
+    N = ceil(bytes / HBM) devices; this projects how much of that
+    slowdown a single-device slot-pool cache with the given hit rate
+    claws back (>1: the cache beats distributing the table).
+    """
+    n = devices_for_table(table_bytes, hw)
+    dist = embedding_bag_time(w, n, hw, onesided=onesided)
+    cached = cached_embedding_bag_time(w, hw, hit_rate=hit_rate)
+    return dist / cached
 
 
 # ---------------------------------------------------------------------------

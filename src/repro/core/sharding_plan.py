@@ -104,7 +104,11 @@ def plan(
             loads[target] += t.bytes
             placements.append(Placement(t, "table", target, tw))
         else:
-            per = t.bytes // num_shards
+            # ceil over ROWS (the split unit), not a floor over bytes: a
+            # floor-divided remainder would vanish from the accounting and
+            # let the HBM-budget check overcommit — the real RW split
+            # gives the heaviest shards ceil(rows/E) whole rows
+            per = -(-t.rows // num_shards) * t.dim * t.dtype_bytes
             for s in range(num_shards):
                 loads[s] += per
             placements.append(Placement(t, "row", -1, rw))

@@ -199,6 +199,12 @@ class DLRMEngine:
     pooling inside is the fused TBE path (``cfg.fused``), so every flush
     costs a single gather kernel launch regardless of the table count.
     Fixed shapes mean the forward compiles exactly once.
+
+    With ``cfg.cache_rows > 0`` the tables live host-resident behind a
+    tiered cache (repro/cache/): ``flush`` PREFETCHES the micro-batch's
+    working set into the HBM slot pool, remaps ids to slots, and runs
+    the same jitted forward over the pool — the pool is a same-shape
+    argument every flush, so admission/eviction never recompiles.
     """
 
     def __init__(self, params, cfg: DLRMConfig, batch_size: int,
@@ -206,6 +212,28 @@ class DLRMEngine:
         self.params, self.cfg, self.ctx = params, cfg, ctx
         self.batch_size = batch_size
         self.queue: List[CTRRequest] = []
+
+        self.cache = None
+        if cfg.cache_rows > 0:
+            if ctx is not None:
+                raise NotImplementedError(
+                    "DLRMEngine: the tiered cache path serves from a "
+                    "single device (cache_rows > 0 with a ParallelContext "
+                    "is not supported — see ROADMAP: cache -> multi-host "
+                    "tiering)")
+            if cfg.cache_rows < cfg.pooling:
+                raise ValueError(
+                    f"cache_rows ({cfg.cache_rows}) must be >= pooling "
+                    f"({cfg.pooling}) so a single request's working set "
+                    f"always fits the slot pool")
+            from repro.core.embedding_bag import make_cache
+
+            self.cache = make_cache(params["tables"],
+                                    cfg.embedding_config())
+            # the cold tier now lives host-side inside the cache; drop the
+            # engine's device-resident tables so serving holds only the
+            # slot pool in HBM — the whole point of the tiered cache
+            self.params = {**params, "tables": None}
 
         def fwd(p, dense, batch):
             return jax.nn.sigmoid(
@@ -225,29 +253,83 @@ class DLRMEngine:
                 f"request {req.rid}: want dense ({F},) / indices ({T}, {L})"
                 f" / lengths ({T},), got {req.dense.shape} / "
                 f"{req.indices.shape} / {req.lengths.shape}")
+        # dtypes too: float indices/lengths would be silently truncated by
+        # the astype into the staging buffers and poison the jitted forward
+        if not np.issubdtype(req.indices.dtype, np.integer):
+            raise TypeError(
+                f"request {req.rid}: indices must be an integer dtype, "
+                f"got {req.indices.dtype}")
+        if not np.issubdtype(req.lengths.dtype, np.integer):
+            raise TypeError(
+                f"request {req.rid}: lengths must be an integer dtype, "
+                f"got {req.lengths.dtype}")
+        if not np.issubdtype(req.dense.dtype, np.floating):
+            raise TypeError(
+                f"request {req.rid}: dense must be a float dtype, "
+                f"got {req.dense.dtype}")
+        # value ranges: the uncached gather clamps out-of-range ids into a
+        # wrong-but-silent score, the cached path would refuse the whole
+        # micro-batch at prefetch — reject per-request instead, up front.
+        # Only WITHIN-LENGTH slots are checked: padding beyond lengths is
+        # arbitrary (sentinels like -1 are masked downstream)
+        if req.lengths.size and (req.lengths.min() < 0
+                                 or req.lengths.max() > L):
+            raise ValueError(
+                f"request {req.rid}: lengths must be in [0, {L}]")
+        R = self.cfg.rows_per_table
+        live = req.indices[np.arange(L) < req.lengths[:, None]]
+        if live.size and (live.min() < 0 or live.max() >= R):
+            raise ValueError(
+                f"request {req.rid}: indices must be in [0, {R})")
         self.queue.append(req)
 
     def flush(self) -> Dict[int, float]:
         """Score up to ``batch_size`` queued requests; returns rid -> pCTR."""
         if not self.queue:
             return {}
+        # peek, don't pop: the cached path's prefetch can refuse the batch
+        # (working set over the slot pool) and the requests must survive
         todo = self.queue[: self.batch_size]
-        self.queue = self.queue[self.batch_size:]
         B = self.batch_size
         T, L = self.cfg.num_sparse_features, self.cfg.pooling
         F = self.cfg.num_dense_features
+        if self.cache is not None:
+            from repro.cache import CacheCapacityError
 
-        dense = np.zeros((B, F), np.float32)
-        idx = np.zeros((T, B, L), np.int32)
-        lens = np.zeros((T, B), np.int32)
-        for i, req in enumerate(todo):    # pad tail slots stay all-masked
-            dense[i] = req.dense
-            idx[:, i, :] = req.indices
-            lens[:, i] = req.lengths
+        while True:
+            dense = np.zeros((B, F), np.float32)
+            idx = np.zeros((T, B, L), np.int32)
+            lens = np.zeros((T, B), np.int32)
+            for i, req in enumerate(todo):   # pad tail slots stay all-masked
+                dense[i] = req.dense
+                idx[:, i, :] = req.indices
+                lens[:, i] = req.lengths
+            params = self.params
+            if self.cache is not None:
+                # prefetch-at-flush: pin this micro-batch's rows in the
+                # slot pool and score against the pool — ids become slot
+                # ids. A refused union (working set over the pool) splits
+                # the micro-batch instead of stalling the queue head; the
+                # __init__ floor (cache_rows >= pooling) guarantees a
+                # single request always fits.
+                try:
+                    idx = self.cache.prefetch_arrays(idx, lens)
+                except CacheCapacityError:
+                    if len(todo) == 1:
+                        raise
+                    todo = todo[: len(todo) // 2]
+                    continue
+                params = {**self.params, "tables": self.cache.pool}
+            break
         batch = JaggedBatch(indices=jnp.asarray(idx),
                             lengths=jnp.asarray(lens))
-        p = np.asarray(self._fwd(self.params, jnp.asarray(dense), batch))
+        p = np.asarray(self._fwd(params, jnp.asarray(dense), batch))
+        self.queue = self.queue[len(todo):]
         return {req.rid: float(p[i]) for i, req in enumerate(todo)}
+
+    def cache_stats(self):
+        """The tiered cache's CacheStats (None when cache_rows == 0)."""
+        return None if self.cache is None else self.cache.stats
 
     def run_to_completion(self) -> Dict[int, float]:
         out: Dict[int, float] = {}

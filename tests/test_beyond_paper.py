@@ -10,10 +10,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+import pytest
+
 from repro.core.embedding_bag import (
     EmbeddingBagConfig,
     extract_hot_table,
     init_tables,
+    pooled_lookup_hot,
     pooled_lookup_local,
 )
 from repro.core.jagged import JaggedBatch, random_jagged_batch
@@ -45,6 +48,37 @@ def test_hot_cold_partition_identity():
     got = hot_out + cold_out
     np.testing.assert_allclose(np.asarray(got), np.asarray(ref),
                                atol=1e-5, rtol=1e-5)
+
+
+@pytest.mark.parametrize("combiner", ["sum", "mean"])
+def test_pooled_lookup_hot_combiners(combiner):
+    """The hot/cold split pools both partitions with sum and (for mean)
+    divides by the full denominators — exact for both combiners."""
+    cfg = EmbeddingBagConfig(num_tables=3, rows_per_table=256, dim=16,
+                             hot_rows=32, combiner=combiner,
+                             sharding="replicated",
+                             kernel_mode="reference")
+    tables = init_tables(jax.random.key(2), cfg)
+    rng = np.random.default_rng(3)
+    batch = random_jagged_batch(rng, 3, 8, 5, 256, fixed_pooling=False,
+                                zipf_a=1.3)
+    hot_table = extract_hot_table(tables, cfg)
+    got = pooled_lookup_hot(tables, hot_table, batch, cfg)
+    want = pooled_lookup_local(tables, batch, cfg)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=1e-5, rtol=1e-5)
+
+
+def test_pooled_lookup_hot_unknown_combiner_raises():
+    cfg = EmbeddingBagConfig(num_tables=2, rows_per_table=64, dim=8,
+                             hot_rows=8, combiner="max",
+                             sharding="replicated")
+    tables = init_tables(jax.random.key(0), cfg)
+    rng = np.random.default_rng(0)
+    batch = random_jagged_batch(rng, 2, 4, 3, 64)
+    with pytest.raises(NotImplementedError, match="combiner 'max'"):
+        pooled_lookup_hot(tables, extract_hot_table(tables, cfg), batch,
+                          cfg)
 
 
 def test_zipf_hot_hit_rate():

@@ -1,0 +1,274 @@
+"""Tiered frequency-aware cache (repro/cache/): exactness vs the uncached
+oracle, eviction behaviour, stats-vs-numpy-simulation, and the fused
+single-launch guarantee of the cached hot path."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import CachedEmbeddingBag, SlotPoolManager
+from repro.core.embedding_bag import (
+    EmbeddingBagConfig,
+    init_tables,
+    make_cache,
+    pooled_lookup_cached,
+    pooled_lookup_local,
+)
+from repro.core.jagged import JaggedBatch, random_jagged_batch
+
+
+def _cfg(T, R=256, D=16, cache_rows=64, policy="lfu", mode="interpret",
+         **kw):
+    return EmbeddingBagConfig(num_tables=T, rows_per_table=R, dim=D,
+                              kernel_mode=mode, cache_rows=cache_rows,
+                              cache_policy=policy, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Exactness: cached == uncached oracle, bitwise, once prefetched
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("T", [1, 4])
+def test_cached_bitwise_equals_oracle_zipf(T):
+    cfg = _cfg(T)
+    tables = init_tables(jax.random.key(0), cfg)
+    cache = make_cache(tables, cfg)
+    rng = np.random.default_rng(T)
+    for _ in range(4):
+        batch = random_jagged_batch(rng, T, 8, 5, cfg.rows_per_table,
+                                    fixed_pooling=False, zipf_a=1.2)
+        got = pooled_lookup_cached(cache, batch)   # the serving-path API
+        want = pooled_lookup_local(tables, batch, cfg)
+        assert got.shape == (8, T, cfg.dim)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert cache.stats.hits > 0         # zipf traffic repeats hot rows
+
+
+@pytest.mark.parametrize("policy", ["lfu", "lru"])
+def test_eviction_keeps_results_exact(policy):
+    """A pool smaller than the cross-batch footprint must churn (evict)
+    without ever changing the pooled output."""
+    cfg = _cfg(2, R=64, D=8, cache_rows=10, policy=policy)
+    tables = init_tables(jax.random.key(1), cfg)
+    cache = make_cache(tables, cfg)
+    rng = np.random.default_rng(2)
+    for i in range(6):
+        idx = jnp.asarray(rng.integers(i * 8, i * 8 + 8, (2, 3, 4)),
+                          jnp.int32)
+        lens = jnp.asarray(rng.integers(1, 5, (2, 3)), jnp.int32)
+        batch = JaggedBatch(idx, lens)
+        got = cache.lookup(batch)
+        want = pooled_lookup_local(tables, batch, cfg)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    assert cache.stats.evictions > 0
+    # indirection invariant: slot_of_id and id_of_slot stay inverse maps
+    m = cache.mgr
+    for t in range(2):
+        res = m.resident_ids(t)
+        slots = m.slot_of_id[t][res]
+        assert (slots >= 0).all()
+        assert np.array_equal(np.sort(m.id_of_slot[t][slots]), res)
+        assert (m.slot_of_id[t] >= 0).sum() == res.size <= m.S
+
+
+def test_cached_mean_and_weighted_exact():
+    for combiner in ("sum", "mean"):
+        cfg = _cfg(3, combiner=combiner)
+        tables = init_tables(jax.random.key(2), cfg)
+        cache = make_cache(tables, cfg)
+        rng = np.random.default_rng(3)
+        batch = random_jagged_batch(rng, 3, 6, 4, cfg.rows_per_table,
+                                    fixed_pooling=False, zipf_a=1.3)
+        batch = JaggedBatch(
+            batch.indices, batch.lengths,
+            jnp.asarray(rng.standard_normal((3, 6, 4)), jnp.float32))
+        got = cache.lookup(batch)
+        want = pooled_lookup_local(tables, batch, cfg)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_prefetch_then_lookup_protocol():
+    """The explicit two-step serving protocol: prefetch returns a
+    slot-remapped batch the device lookup can consume as-is."""
+    cfg = _cfg(2)
+    tables = init_tables(jax.random.key(3), cfg)
+    cache = make_cache(tables, cfg)
+    rng = np.random.default_rng(4)
+    batch = random_jagged_batch(rng, 2, 5, 4, cfg.rows_per_table,
+                                zipf_a=1.2)
+    remapped = cache.prefetch(batch)
+    assert int(remapped.indices.max()) < cache.mgr.S
+    got = cache.lookup(remapped, prefetched=True)
+    want = pooled_lookup_local(tables, batch, cfg)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+# ---------------------------------------------------------------------------
+# Stats: counting semantics vs an independent numpy simulation
+# ---------------------------------------------------------------------------
+
+def test_stats_match_numpy_simulation_no_eviction():
+    """With a pool bigger than the total footprint (no eviction), hits and
+    misses are fully determined by first-occurrence: simulate in numpy."""
+    T, B, L, R = 2, 16, 4, 512
+    cfg = _cfg(T, R=R, cache_rows=256, mode="reference")
+    tables = init_tables(jax.random.key(4), cfg)
+    cache = make_cache(tables, cfg)
+    rng = np.random.default_rng(5)
+    batches = [random_jagged_batch(rng, T, B, L, R, zipf_a=1.2)
+               for _ in range(5)]
+
+    seen = [set() for _ in range(T)]
+    sim_hits = sim_misses = sim_rows = 0
+    for b in batches:
+        idx, lens = np.asarray(b.indices), np.asarray(b.lengths)
+        valid = np.arange(L) < lens[..., None]
+        for t in range(T):
+            ids = idx[t][valid[t]]
+            uniq, counts = np.unique(ids, return_counts=True)
+            for u, c in zip(uniq, counts):
+                if u in seen[t]:
+                    sim_hits += c
+                else:
+                    sim_misses += c
+                    sim_rows += 1
+                    seen[t].add(u)
+        cache.prefetch(b)
+
+    assert cache.stats.hits == sim_hits
+    assert cache.stats.misses == sim_misses
+    assert cache.stats.evictions == 0
+    assert cache.stats.bytes_h2d == sim_rows * cfg.dim * 4
+    assert cache.stats.batches == 5
+
+
+def test_stats_deterministic_eviction_sequence():
+    """Hand-scripted LFU sequence where victim choice is forced."""
+    cfg = _cfg(1, R=32, cache_rows=2, mode="reference")
+    tables = init_tables(jax.random.key(5), cfg)
+    cache = make_cache(tables, cfg)
+
+    def feed(ids):
+        arr = jnp.asarray(np.array(ids, np.int32).reshape(1, 1, -1))
+        lens = jnp.full((1, 1), len(ids), jnp.int32)
+        cache.prefetch(JaggedBatch(arr, lens))
+
+    feed([0, 0, 0, 1, 1])      # both miss: misses=5, freq 0:3 1:2
+    assert (cache.stats.hits, cache.stats.misses) == (0, 5)
+    feed([0, 2])               # 0 hits; 2 misses+admits, evicts 1 (freq 2<4)
+    assert (cache.stats.hits, cache.stats.misses) == (1, 6)
+    assert cache.stats.evictions == 1
+    assert set(cache.mgr.resident_ids(0)) == {0, 2}
+    feed([1])                  # miss; LFU victim is 2 (freq 1 < freq 0=4)
+    assert set(cache.mgr.resident_ids(0)) == {0, 1}
+    assert cache.stats.evictions == 2
+    assert cache.stats.misses == 7
+
+
+# ---------------------------------------------------------------------------
+# Structure: the cached hot path stays ONE fused gather pallas_call
+# ---------------------------------------------------------------------------
+
+def test_cached_hot_path_single_pallas_call():
+    cfg = _cfg(4)
+    tables = init_tables(jax.random.key(6), cfg)
+    cache = make_cache(tables, cfg)
+    pool = jax.ShapeDtypeStruct(cache.pool.shape, cache.pool.dtype)
+    idx = jax.ShapeDtypeStruct((4, 8, 5), jnp.int32)
+    w = jax.ShapeDtypeStruct((4, 8, 5), jnp.float32)
+    jaxpr = str(jax.make_jaxpr(
+        lambda p, i, ww: cache.device_lookup(p, i, None, ww))(pool, idx, w))
+    assert jaxpr.count("pallas_call") == 1
+
+
+# ---------------------------------------------------------------------------
+# Guards
+# ---------------------------------------------------------------------------
+
+def test_working_set_over_pool_raises():
+    cfg = _cfg(1, R=64, cache_rows=3, mode="reference")
+    cache = make_cache(init_tables(jax.random.key(7), cfg), cfg)
+    batch = JaggedBatch(jnp.arange(8, dtype=jnp.int32).reshape(1, 2, 4),
+                        jnp.full((1, 2), 4, jnp.int32))
+    with pytest.raises(RuntimeError, match="slot pool"):
+        cache.lookup(batch)
+
+
+def test_failed_prefetch_leaves_cache_consistent():
+    """prepare() must be atomic: a raise on table 1 (bad ids) must not
+    leave table 0's rows marked resident with no payload copied —
+    regression for silently-zero lookups after a caught error."""
+    cfg = _cfg(2, R=64, cache_rows=16)
+    tables = init_tables(jax.random.key(10), cfg)
+    cache = make_cache(tables, cfg)
+    bad = np.zeros((2, 2, 3), np.int32)
+    bad[0] = [[1, 2, 3], [4, 5, 6]]       # table 0: fine
+    bad[1, 0, 0] = 64                     # table 1: out of range
+    lens = jnp.full((2, 2), 3, jnp.int32)
+    with pytest.raises(IndexError):
+        cache.prefetch(JaggedBatch(jnp.asarray(bad), lens))
+    assert cache.mgr.resident_rows == 0   # nothing half-admitted
+    assert cache.stats.lookups == 0
+    good = JaggedBatch(jnp.asarray(np.clip(bad, 0, 63)), lens)
+    np.testing.assert_array_equal(
+        np.asarray(cache.lookup(good)),
+        np.asarray(pooled_lookup_local(tables, good, cfg)))
+
+
+def test_failed_pool_copy_rolls_back_residency():
+    """If the host->device payload copy dies AFTER prepare() committed
+    the metadata, the fetched rows must be marked non-resident again —
+    otherwise later batches 'hit' slots holding no payload."""
+    cfg = _cfg(1, R=64, cache_rows=16)
+    tables = init_tables(jax.random.key(11), cfg)
+    cache = make_cache(tables, cfg)
+    batch = JaggedBatch(jnp.asarray([[[1, 2, 3]]], jnp.int32),
+                        jnp.full((1, 1), 3, jnp.int32))
+    real_host = cache.host
+    cache.host = None                     # force the copy to blow up
+    with pytest.raises(TypeError):
+        cache.prefetch(batch)
+    cache.host = real_host
+    assert cache.mgr.resident_rows == 0   # no phantom residency
+    np.testing.assert_array_equal(
+        np.asarray(cache.lookup(batch)),
+        np.asarray(pooled_lookup_local(tables, batch, cfg)))
+
+
+def test_capacity_error_is_dedicated_type():
+    from repro.cache import CacheCapacityError
+
+    cfg = _cfg(1, R=64, cache_rows=3, mode="reference")
+    cache = make_cache(init_tables(jax.random.key(12), cfg), cfg)
+    batch = JaggedBatch(jnp.arange(8, dtype=jnp.int32).reshape(1, 2, 4),
+                        jnp.full((1, 2), 4, jnp.int32))
+    with pytest.raises(CacheCapacityError):
+        cache.lookup(batch)
+
+
+def test_bad_policy_and_zero_rows_raise():
+    cfg = _cfg(1, cache_rows=8)
+    tables = init_tables(jax.random.key(8), cfg)
+    with pytest.raises(ValueError, match="cache_policy"):
+        CachedEmbeddingBag(tables, cfg, policy="fifo")
+    with pytest.raises(ValueError, match="cache_rows"):
+        CachedEmbeddingBag(tables, dataclasses.replace(cfg, cache_rows=0))
+
+
+def test_pool_never_reallocates():
+    """The pool object identity may change (functional updates) but shape,
+    dtype and slot count are pinned at construction."""
+    cfg = _cfg(2, R=128, cache_rows=16)
+    cache = make_cache(init_tables(jax.random.key(9), cfg), cfg)
+    shape = cache.pool.shape
+    rng = np.random.default_rng(6)
+    for _ in range(3):
+        cache.prefetch(random_jagged_batch(rng, 2, 4, 3, 128, zipf_a=1.2))
+    assert cache.pool.shape == shape == (2, 16, cfg.dim)
+
+
+def test_manager_slots_capped_at_rows():
+    m = SlotPoolManager(1, rows=8, slots=100)
+    assert m.S == 8

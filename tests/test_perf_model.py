@@ -5,11 +5,15 @@ from repro.core.perf_model import (
     H100_DGX,
     TPU_V5E,
     EmbeddingWorkload,
+    cache_speedup_vs_distributed,
+    cached_embedding_bag_time,
+    cached_phase_times,
     collective_time,
     devices_for_table,
     embedding_bag_time,
     local_vs_distributed_speedup,
     phase_times,
+    zipf_hit_rate,
 )
 from repro.core.sharding_plan import TableSpec, plan
 
@@ -73,6 +77,23 @@ def test_phase_times_monotonic():
     assert set(p) == {"permute", "gather", "reduce_scatter"}
 
 
+def test_planner_rw_memory_accounting_is_ceil():
+    """Regression: floor-divided per-shard RW bytes dropped the remainder
+    rows, undercounting every shard's load — the accounting must charge
+    the heaviest shard's ceil(rows/E) WHOLE rows so HBM-budget checks
+    can't overcommit."""
+    # 1000 rows over 7 shards: heaviest shard holds ceil(1000/7) = 143
+    # rows = 143 * 32 * 4 = 18304 B (floor-of-bytes gave 18285)
+    t = TableSpec("t", rows=1000, dim=32, pooling=4)
+    p = plan([t], num_shards=7, batch_per_shard=8,
+             hbm_budget_bytes=1.0)        # budget too small -> RW fallback
+    assert p.strategy_of("t") == "row"
+    per = p.per_shard_bytes[0]
+    assert all(b == per for b in p.per_shard_bytes)
+    assert per == -(-t.rows // 7) * 32 * 4 == 18304
+    assert per >= t.bytes / 7                    # never undercounts
+
+
 def test_planner_tw_packs_small_rw_splits_big():
     tables = [TableSpec(f"small{i}", rows=1000, dim=32, pooling=4)
               for i in range(6)]
@@ -83,3 +104,42 @@ def test_planner_tw_packs_small_rw_splits_big():
     assert all(p.strategy_of(f"small{i}") == "table" for i in range(6))
     # memory balanced within budget
     assert max(p.per_shard_bytes) <= 2e9 * 1.5
+
+
+# ---------------------------------------------------------------------------
+# Tiered-cache projections (repro/cache/)
+# ---------------------------------------------------------------------------
+
+def test_zipf_hit_rate_calibration():
+    """Closed form vs the empirical steady state (simulated separately:
+    R=2^20, 1% cache, a=1.2 -> ~0.918; a=1.05 -> ~0.866)."""
+    assert abs(zipf_hit_rate(1.2, 1 << 20, 10485) - 0.918) < 0.02
+    assert abs(zipf_hit_rate(1.05, 1 << 20, 10485) - 0.866) < 0.02
+    # monotone in cache size; degenerate ends
+    rates = [zipf_hit_rate(1.2, 1 << 20, c) for c in (0, 100, 10000, 1 << 20)]
+    assert rates == sorted(rates)
+    assert rates[0] == 0.0 and rates[-1] == 1.0
+
+
+def test_cached_phase_times_hit_rate_lever():
+    w = EmbeddingWorkload(num_tables=26, batch_per_device=1024, pooling=32,
+                          dim=128)
+    perfect = cached_phase_times(w, H100_DGX, hit_rate=1.0)
+    cold = cached_phase_times(w, H100_DGX, hit_rate=0.0)
+    assert set(perfect) == {"prefetch_h2d", "gather"}
+    assert perfect["prefetch_h2d"] == 0.0         # nothing crosses the host
+    assert cold["prefetch_h2d"] > cold["gather"]  # host link << HBM
+    assert cached_embedding_bag_time(w, H100_DGX, hit_rate=0.9) < \
+        cached_embedding_bag_time(w, H100_DGX, hit_rate=0.5)
+
+
+def test_cache_beats_distribution_at_high_hit_rate():
+    """The Fig. 9 slowdown is recovered by a hot cache: at the ~90% hit
+    rate a 1% pool reaches under zipf 1.2, one cached device beats the
+    128-GPU distributed pipeline; at 0% it must not."""
+    w = EmbeddingWorkload(num_tables=26, batch_per_device=1024, pooling=32,
+                          dim=128)
+    hot = cache_speedup_vs_distributed(10e12, w, H100_DGX, hit_rate=0.9)
+    cold = cache_speedup_vs_distributed(10e12, w, H100_DGX, hit_rate=0.0)
+    assert hot > 1.0
+    assert hot > cold
