@@ -40,11 +40,22 @@ Integration points: ``EmbeddingBagConfig.cache_rows/cache_policy``,
 parameterized projections (core/perf_model.py), and the zipf sweep in
 benchmarks/cache_sweep.py.
 
-Open direction (ROADMAP.md): multi-host tiering — the cold tier behind
-a remote fetch instead of local host memory — and planner-aware cache
-sizing (sharding_plan.py choosing cache_rows against the HBM budget).
+PR 3 generalized the store into a TIER STACK (tiers.py): the slot pool,
+host tables and remote row-shards all implement the small ``TableStore``
+interface — ``SlotPool`` (tier "hbm", the kernel operand), ``HostStore``
+(tier "host", local numpy) and ``RemoteStore`` (tier "remote", rows
+split over peer ranks and fetched through ONE batched
+``comm.fetch_rows`` collective per prefetch: bulk psum_scatter or the
+device-initiated one-sided RDMA kernel).  ``SlotPoolManager.prepare``
+emits a per-tier ``PrefetchPlan`` (host-owned vs peer-owned fetch rows),
+``CacheStats`` splits miss traffic by source tier (``bytes_h2d`` vs
+``bytes_remote``), and ``warmup_freqs`` seeds the LFU counters from an
+offline ``ids_freq_mapping`` so serving skips the cold-start miss burst.
+``core/sharding_plan.plan`` prices slot pools as a fourth "cached"
+placement strategy against the modeled tiered phase times
+(``core/perf_model.tiered_phase_times``).
 """
-from repro.cache.cached_bag import CachedEmbeddingBag
+from repro.cache.cached_bag import CachedEmbeddingBag, make_cold_store
 from repro.cache.manager import (
     POLICIES,
     CacheCapacityError,
@@ -52,12 +63,18 @@ from repro.cache.manager import (
     SlotPoolManager,
 )
 from repro.cache.stats import CacheStats
+from repro.cache.tiers import HostStore, RemoteStore, SlotPool, TableStore
 
 __all__ = [
     "CachedEmbeddingBag",
     "CacheCapacityError",
     "CacheStats",
+    "HostStore",
     "PrefetchPlan",
+    "RemoteStore",
+    "SlotPool",
     "SlotPoolManager",
+    "TableStore",
+    "make_cold_store",
     "POLICIES",
 ]

@@ -1,14 +1,24 @@
-"""``CachedEmbeddingBag`` — tiered lookup: HBM slot pool over host tables.
+"""``CachedEmbeddingBag`` — tiered lookup: HBM slot pool over a cold tier.
 
-The full ``(T, R, D)`` tables live host-resident (numpy, the cold tier);
-a fixed ``(T, S, D)`` device slot pool (the hot tier) holds the rows the
-:class:`repro.cache.manager.SlotPoolManager` decided to cache.  The
-serving protocol is two explicit steps:
+The store is a tier stack behind the :class:`repro.cache.tiers.TableStore`
+interface: a fixed ``(T, S, D)`` device :class:`SlotPool` (the hot tier
+the fused TBE kernel reads) fronting ONE cold tier —
 
-  1. ``prefetch(batch)`` — host-side: admit the batch's working set
-     (copying missing rows host->device in ONE scatter), update the
-     LFU/LRU state and :class:`CacheStats`, and return the batch with
-     ids remapped to pool slots;
+  * :class:`HostStore` (``cold_tier="host"``): the full ``(T, R, D)``
+    tables in the serving host's memory, misses cross the host<->device
+    link (the PR-2 layout);
+  * :class:`RemoteStore` (``cold_tier="remote"``): tables row-split over
+    peer ranks, misses batch into ONE cross-host ``comm.fetch_rows``
+    collective per prefetch (bulk psum_scatter or the device-initiated
+    one-sided RDMA kernel, per ``remote_backend``).
+
+The serving protocol is two explicit steps:
+
+  1. ``prefetch(batch)`` — host-side: admit the batch's working set (the
+     :class:`SlotPoolManager`'s per-tier PrefetchPlan: cold fetch + ONE
+     flat pool scatter), update the LFU/LRU state and per-tier
+     :class:`CacheStats`, and return the batch with ids remapped to pool
+     slots;
   2. ``lookup(batch)`` / ``device_lookup(...)`` — device-side: one fused
      TBE ``pallas_call`` over the slot pool, identical kernel to the
      uncached ``pooled_lookup_local`` path (the slot remap happens in the
@@ -16,63 +26,117 @@ serving protocol is two explicit steps:
 
 Exactness: after ``prefetch`` every valid lookup's row is pool-resident
 and the pooled output is BITWISE equal to the uncached oracle — same
-kernel, same weights, same summation order, same row payloads.
+kernel, same weights, same summation order, same row payloads — under
+ANY tier layout (a fetched row's payload is bitwise the source table row
+whichever tier served it).
 """
 from __future__ import annotations
 
-import functools
-import warnings
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.cache.manager import SlotPoolManager
+from repro.cache.manager import PrefetchPlan, SlotPoolManager
 from repro.cache.stats import CacheStats
+from repro.cache.tiers import HostStore, RemoteStore, SlotPool, TableStore
 from repro.core.embedding_bag import EmbeddingBagConfig
 from repro.core.jagged import JaggedBatch
 from repro.kernels import ops as kops
 
 
-@functools.partial(jax.jit, donate_argnums=(0,))
-def _scatter_rows(pool: jax.Array, addr: jax.Array,
-                  rows: jax.Array) -> jax.Array:
-    """Write fetched rows into the pool at flat addresses ``t*S + slot``.
-
-    Jitted with the pool DONATED so accelerator backends update the
-    buffer in place — O(M*D) HBM writes per prefetch, not an O(T*S*D)
-    whole-pool copy (an eager ``.at[].set`` cannot alias its input).
-    """
-    T, S, D = pool.shape
-    return pool.reshape(T * S, D).at[addr].set(rows).reshape(T, S, D)
+def make_cold_store(tables, cfg: EmbeddingBagConfig) -> TableStore:
+    """Build the cold tier named by ``cfg.cold_tier``."""
+    if cfg.cold_tier == "host":
+        return HostStore(tables)
+    if cfg.cold_tier == "remote":
+        return RemoteStore(tables, hosts=cfg.remote_hosts or None,
+                           backend=cfg.remote_backend)
+    raise ValueError(
+        f"unknown cold_tier {cfg.cold_tier!r}; pick 'host' or 'remote'")
 
 
 class CachedEmbeddingBag:
     def __init__(self, tables, cfg: EmbeddingBagConfig, *,
                  cache_rows: Optional[int] = None,
-                 policy: Optional[str] = None):
+                 policy: Optional[str] = None,
+                 cold_store: Optional[TableStore] = None):
         if cfg.combiner not in ("sum", "mean"):
             raise NotImplementedError(
                 f"CachedEmbeddingBag: combiner {cfg.combiner!r} "
                 f"(EmbeddingBagConfig.combiner) is not supported")
         self.cfg = cfg
-        self.host = np.asarray(tables)          # cold tier, (T, R, D)
-        if self.host.ndim != 3:
-            raise ValueError(f"tables must be (T, R, D), got "
-                             f"{self.host.shape}")
-        T, R, D = self.host.shape
+        tables = np.asarray(tables)
+        if tables.ndim != 3:
+            raise ValueError(f"tables must be (T, R, D), got {tables.shape}")
+        self.cold = cold_store if cold_store is not None \
+            else make_cold_store(tables, cfg)
+        T, R, D = tables.shape
+        self.dtype = tables.dtype
         S = int(cache_rows if cache_rows is not None else cfg.cache_rows)
         if S <= 0:
             raise ValueError(
                 "cache_rows must be > 0 to build a CachedEmbeddingBag "
                 "(set EmbeddingBagConfig.cache_rows or pass cache_rows=)")
-        self.mgr = SlotPoolManager(T, R, S,
-                                   policy if policy is not None
-                                   else cfg.cache_policy)
-        self.pool = jnp.zeros((T, self.mgr.S, D), self.host.dtype)  # hot tier
+        self.mgr = SlotPoolManager(
+            T, R, S,
+            policy if policy is not None else cfg.cache_policy,
+            rows_per_host=self.cold.rows_per_host, home=self.cold.home)
+        self.hot = SlotPool(T, self.mgr.S, D, self.dtype)
         self.stats = CacheStats()
-        self.row_bytes = D * self.host.dtype.itemsize
+        self.row_bytes = D * self.dtype.itemsize
+        if cfg.warmup_freqs is not None:
+            self.mgr.seed_frequencies(np.asarray(cfg.warmup_freqs))
+            self._apply_fetch(self.mgr.warmup_admit(), count_batch=False)
+
+    # -- tier plumbing -------------------------------------------------------
+
+    @property
+    def pool(self) -> jax.Array:
+        """The hot tier's ``(T, S, D)`` device array (the kernel operand)."""
+        return self.hot.array
+
+    @property
+    def host(self):
+        """The local cold tier's numpy tables (None-able test hook)."""
+        if not isinstance(self.cold, HostStore):
+            raise AttributeError(
+                f"cold tier {self.cold.tier!r} has no local host tables")
+        return self.cold.tables
+
+    @host.setter
+    def host(self, value):
+        if not isinstance(self.cold, HostStore):
+            raise AttributeError(
+                f"cold tier {self.cold.tier!r} has no local host tables")
+        self.cold.tables = value
+
+    def _apply_fetch(self, plan: PrefetchPlan, *, count_batch: bool) -> None:
+        """Execute a plan's cold fetch + pool scatter, update stats.
+
+        Metadata stays honest on failure: prepare()/warmup_admit()
+        committed residency for the fetched rows, so any error between
+        the cold fetch and the pool scatter rolls that back
+        (``invalidate_fetch``) — no slot ever claims an uncopied row."""
+        if plan.fetch_rows.size:
+            try:
+                rows = self.cold.fetch(plan.fetch_tables, plan.fetch_rows)
+                addr = plan.fetch_tables.astype(np.int64) * self.mgr.S \
+                    + plan.fetch_slots
+                self.hot.scatter(addr, rows)
+            except BaseException:
+                self.mgr.invalidate_fetch(plan)
+                raise
+        self.stats.update(
+            hits=plan.hits, misses=plan.misses,
+            misses_host=plan.misses_host, misses_remote=plan.misses_remote,
+            evictions=plan.evictions,
+            bytes_h2d=plan.fetch_host_rows * self.row_bytes,
+            bytes_remote=plan.fetch_remote_rows * self.row_bytes,
+            fetch_host=plan.fetch_host_rows,
+            fetch_remote=plan.fetch_remote_rows,
+            count_batch=count_batch)
 
     # -- tier-1 protocol: prefetch then lookup -------------------------------
 
@@ -80,9 +144,10 @@ class CachedEmbeddingBag:
                         lengths: Optional[np.ndarray]) -> np.ndarray:
         """Host-array prefetch: (T, B, L) ids -> (T, B, L) pool slots.
 
-        Pulls every missing row of the batch host->device (one flat
-        scatter into the pool), updates stats, and returns the
-        slot-remapped indices.  ``lengths`` None means every slot valid.
+        Pulls every missing row of the batch cold-tier -> pool (one
+        batched cold fetch + one flat scatter), updates stats, and
+        returns the slot-remapped indices.  ``lengths`` None means every
+        slot valid.
         """
         indices = np.asarray(indices)
         if lengths is None:
@@ -91,33 +156,7 @@ class CachedEmbeddingBag:
             L = indices.shape[-1]
             valid = np.arange(L) < np.asarray(lengths)[..., None]
         plan = self.mgr.prepare(indices, valid)
-        if plan.fetch_rows.size:
-            S = self.pool.shape[1]
-            try:
-                rows = self.host[plan.fetch_tables, plan.fetch_rows]  # (M, D)
-                addr = plan.fetch_tables.astype(np.int64) * S \
-                    + plan.fetch_slots
-                # pad M to the next power of two (idempotent duplicates of
-                # the last write) so _scatter_rows compiles O(log M_max)
-                # shapes, not one per distinct miss count
-                pad = (1 << (addr.size - 1).bit_length()) - addr.size
-                if pad:
-                    addr = np.concatenate([addr, np.repeat(addr[-1:], pad)])
-                    rows = np.concatenate(
-                        [rows, np.repeat(rows[-1:], pad, axis=0)])
-                with warnings.catch_warnings():
-                    # CPU backends skip donation with a warning; harmless
-                    warnings.simplefilter("ignore")
-                    self.pool = _scatter_rows(
-                        self.pool, jnp.asarray(addr), jnp.asarray(rows))
-            except BaseException:
-                # keep metadata honest: prepare() admitted these rows but
-                # their payload never reached the pool
-                self.mgr.invalidate_fetch(plan)
-                raise
-        self.stats.update(hits=plan.hits, misses=plan.misses,
-                          evictions=plan.evictions,
-                          bytes_h2d=plan.fetch_rows.size * self.row_bytes)
+        self._apply_fetch(plan, count_batch=True)
         return plan.remapped
 
     def prefetch(self, batch: JaggedBatch) -> JaggedBatch:
@@ -159,4 +198,4 @@ class CachedEmbeddingBag:
 
     @property
     def pool_bytes(self) -> int:
-        return int(self.pool.size) * self.host.dtype.itemsize
+        return self.hot.nbytes

@@ -44,20 +44,42 @@ class CacheCapacityError(RuntimeError):
 
 @dataclasses.dataclass
 class PrefetchPlan:
-    """One batch's cache actions, to be applied by the owning bag."""
+    """One batch's cache actions, to be applied by the owning bag.
+
+    The fetch list is split PER COLD TIER: ``fetch_owner`` names the host
+    owning each fetched row (every row == ``home`` under a single-host
+    cold tier), so the bag can account host-link vs network traffic and a
+    RemoteStore can batch the cross-host rows into one ``fetch_rows``
+    collective."""
 
     remapped: np.ndarray     # (T, B, L) int32 slot ids (non-resident -> 0)
     fetch_tables: np.ndarray  # (M,) int32 table of each row to copy h->d
     fetch_rows: np.ndarray    # (M,) int64 host row id of each copied row
     fetch_slots: np.ndarray   # (M,) int64 destination slot of each row
+    fetch_owner: np.ndarray = None   # (M,) int32 owning host of each row
+    home: int = 0             # the serving host's rank in the cold tier
     hits: int = 0             # per-lookup (see stats.py counting semantics)
     misses: int = 0
+    misses_host: int = 0      # misses whose row the serving host owns
+    misses_remote: int = 0    # misses served by a peer host's shard
     evictions: int = 0
+
+    @property
+    def fetch_remote_rows(self) -> int:
+        """Unique fetched rows owned by peer hosts (network traffic)."""
+        return 0 if self.fetch_owner is None else \
+            int((self.fetch_owner != self.home).sum())
+
+    @property
+    def fetch_host_rows(self) -> int:
+        """Unique fetched rows the serving host owns (h2d traffic)."""
+        return int(self.fetch_rows.size - self.fetch_remote_rows)
 
 
 class SlotPoolManager:
     def __init__(self, num_tables: int, rows: int, slots: int,
-                 policy: str = "lfu"):
+                 policy: str = "lfu", *, rows_per_host: int = None,
+                 home: int = 0):
         if policy not in POLICIES:
             raise ValueError(
                 f"unknown cache_policy {policy!r}; pick one of {POLICIES}")
@@ -65,11 +87,21 @@ class SlotPoolManager:
             raise ValueError(f"slot pool must be positive, got {slots}")
         self.T, self.R, self.S = num_tables, rows, min(slots, rows)
         self.policy = policy
+        # cold-tier ownership layout: row r lives on host r // rows_per_host;
+        # rows the serving host (``home``) owns are HOST-tier traffic,
+        # everything else is REMOTE-tier.  Single-host default: all local.
+        self.rows_per_host = int(rows_per_host or rows)
+        self.home = int(home)
         self.slot_of_id = np.full((self.T, self.R), -1, np.int32)
         self.id_of_slot = np.full((self.T, self.S), -1, np.int64)
         self.freq = np.zeros((self.T, self.R), np.int64)
         self.last_used = np.full((self.T, self.S), -1, np.int64)
         self.tick = 0
+
+    def _owner(self, row_ids: np.ndarray) -> np.ndarray:
+        """Owning host of each row id under the cold tier's row split."""
+        return (np.asarray(row_ids, np.int64)
+                // self.rows_per_host).astype(np.int32)
 
     @property
     def resident_rows(self) -> int:
@@ -86,7 +118,7 @@ class SlotPoolManager:
         indices = np.asarray(indices)
         valid = np.asarray(valid, bool)
         plan_t, plan_r, plan_s = [], [], []
-        hits = misses = evictions = 0
+        hits = misses = misses_remote = evictions = 0
         remapped = np.zeros(indices.shape, np.int32)
 
         # Validate EVERY table before mutating ANY state: prepare must be
@@ -116,6 +148,8 @@ class SlotPoolManager:
             hits += int(counts[resident].sum())
             misses += int(counts[~resident].sum())
             miss_ids = uniq[~resident]
+            misses_remote += int(
+                counts[~resident][self._owner(miss_ids) != self.home].sum())
 
             if miss_ids.size:
                 free = np.flatnonzero(self.id_of_slot[t] < 0)
@@ -143,12 +177,76 @@ class SlotPoolManager:
         self.tick += 1
         cat = lambda xs, dt: (np.concatenate(xs) if xs
                               else np.zeros((0,), dt))
+        fetch_rows = cat(plan_r, np.int64)
         return PrefetchPlan(
             remapped=remapped,
             fetch_tables=cat(plan_t, np.int32),
-            fetch_rows=cat(plan_r, np.int64),
+            fetch_rows=fetch_rows,
             fetch_slots=cat(plan_s, np.int64),
-            hits=hits, misses=misses, evictions=evictions,
+            fetch_owner=self._owner(fetch_rows),
+            home=self.home,
+            hits=hits, misses=misses,
+            misses_host=misses - misses_remote,
+            misses_remote=misses_remote,
+            evictions=evictions,
+        )
+
+    # -- offline warmup (CacheEmbedding-style ids_freq_mapping) --------------
+
+    def seed_frequencies(self, freqs: np.ndarray) -> None:
+        """Seed the persistent per-row counters from logged frequencies.
+
+        ``freqs`` is the offline ``ids_freq_mapping``: (T, R) observed
+        lookup counts per row (a (R,) array broadcasts to every table).
+        Counters ADD so re-seeding composes with live traffic; LFU
+        eviction then ranks cold-start victims by the logged history
+        instead of treating every fresh row as frequency ~1.
+        """
+        freqs = np.asarray(freqs)
+        if freqs.ndim == 1:
+            freqs = np.broadcast_to(freqs, (self.T, self.R))
+        if freqs.shape != (self.T, self.R):
+            raise ValueError(
+                f"warmup freqs must be (T={self.T}, R={self.R}) or "
+                f"(R={self.R},), got {freqs.shape}")
+        if freqs.min() < 0:
+            raise ValueError("warmup freqs must be non-negative")
+        self.freq += freqs.astype(np.int64)
+
+    def warmup_admit(self) -> PrefetchPlan:
+        """Admit each table's top-S rows by (seeded) frequency.
+
+        Returns the fetch plan for the rows newly admitted — executed by
+        the bag like a batch prefetch, but with NO lookups: the first
+        real flush then hits instead of paying the cold-start miss burst.
+        Only rows with a positive counter are admitted (an all-zero seed
+        admits nothing)."""
+        plan_t, plan_r, plan_s = [], [], []
+        for t in range(self.T):
+            order = np.argsort(-self.freq[t], kind="stable")
+            top = order[: self.S]
+            top = top[self.freq[t, top] > 0]
+            fresh = top[self.slot_of_id[t, top] < 0]
+            if not fresh.size:
+                continue
+            free = np.flatnonzero(self.id_of_slot[t] < 0)[: fresh.size]
+            fresh = fresh[: free.size]          # never evict during warmup
+            self.slot_of_id[t, fresh] = free
+            self.id_of_slot[t, free] = fresh
+            self.last_used[t, free] = self.tick
+            plan_t.append(np.full(fresh.size, t, np.int32))
+            plan_r.append(fresh.astype(np.int64))
+            plan_s.append(free.astype(np.int64))
+        cat = lambda xs, dt: (np.concatenate(xs) if xs
+                              else np.zeros((0,), dt))
+        fetch_rows = cat(plan_r, np.int64)
+        return PrefetchPlan(
+            remapped=np.zeros((self.T, 0, 0), np.int32),
+            fetch_tables=cat(plan_t, np.int32),
+            fetch_rows=fetch_rows,
+            fetch_slots=cat(plan_s, np.int64),
+            fetch_owner=self._owner(fetch_rows),
+            home=self.home,
         )
 
     def _pick_victims(self, t: int, need: int,

@@ -9,10 +9,23 @@ Counting semantics (matched by the numpy simulation in tests/test_cache.py):
     ``prefetch`` time, before this batch's admissions, and MISSES
     otherwise — every occurrence of a non-resident id in the batch counts
     as a miss (the row is then admitted, so the *next* batch hits);
+  * misses split by the COLD TIER that serves the row: ``misses_host``
+    when the serving host owns it (fetched over the host<->device link),
+    ``misses_remote`` when a peer host does (fetched over the network via
+    ``comm.fetch_rows``) — with a local-host cold tier everything is
+    ``misses_host``;
   * ``evictions`` counts slot reassignments (one per victim row);
-  * ``bytes_h2d`` counts host->device row payload moved by ``prefetch``
-    (``misses_unique * dim * itemsize``) — the PCIe/host-link traffic the
-    perf model charges to ``host_Bps``.
+  * ``bytes_h2d`` counts host->device row payload moved for LOCALLY-owned
+    fetched rows (``host-tier rows * dim * itemsize``) — the PCIe/host-link
+    traffic the perf model charges to ``host_Bps``;
+  * ``bytes_remote`` counts the network payload of REMOTELY-owned fetched
+    rows (disjoint from ``bytes_h2d``; in a real deployment those rows
+    additionally cross the requester's host link on arrival — the perf
+    model's ``tiered_phase_times`` charges both, the stats keep the tiers
+    disjoint so traffic attributes to one source);
+  * ``fetch_host`` / ``fetch_remote`` count the unique rows each cold
+    tier actually moved (warmup admission counts here too, with zero
+    hits/misses — it happens before any lookup).
 """
 from __future__ import annotations
 
@@ -26,8 +39,13 @@ class CacheStats:
 
     hits: int = 0
     misses: int = 0
+    misses_host: int = 0
+    misses_remote: int = 0
     evictions: int = 0
     bytes_h2d: int = 0
+    bytes_remote: int = 0
+    fetch_host: int = 0
+    fetch_remote: int = 0
     batches: int = 0
 
     @property
@@ -39,29 +57,54 @@ class CacheStats:
         n = self.lookups
         return self.hits / n if n else 0.0
 
+    @property
+    def remote_miss_fraction(self) -> float:
+        """Share of misses the REMOTE tier served (0 with a local cold tier)."""
+        return self.misses_remote / self.misses if self.misses else 0.0
+
     def update(self, *, hits: int, misses: int, evictions: int,
-               bytes_h2d: int) -> None:
+               bytes_h2d: int, misses_host: int = None,
+               misses_remote: int = 0, bytes_remote: int = 0,
+               fetch_host: int = 0, fetch_remote: int = 0,
+               count_batch: bool = True) -> None:
         self.hits += int(hits)
         self.misses += int(misses)
+        # default: an un-split update attributes every miss to the host tier
+        self.misses_host += int(misses - misses_remote
+                                if misses_host is None else misses_host)
+        self.misses_remote += int(misses_remote)
         self.evictions += int(evictions)
         self.bytes_h2d += int(bytes_h2d)
-        self.batches += 1
+        self.bytes_remote += int(bytes_remote)
+        self.fetch_host += int(fetch_host)
+        self.fetch_remote += int(fetch_remote)
+        if count_batch:
+            self.batches += 1
 
     def reset(self) -> None:
-        self.hits = self.misses = self.evictions = 0
-        self.bytes_h2d = self.batches = 0
+        self.hits = self.misses = self.misses_host = self.misses_remote = 0
+        self.evictions = self.bytes_h2d = self.bytes_remote = 0
+        self.fetch_host = self.fetch_remote = self.batches = 0
 
     def as_dict(self) -> Dict[str, float]:
         return {
             "hits": self.hits,
             "misses": self.misses,
+            "misses_host": self.misses_host,
+            "misses_remote": self.misses_remote,
             "evictions": self.evictions,
             "bytes_h2d": self.bytes_h2d,
+            "bytes_remote": self.bytes_remote,
+            "fetch_host": self.fetch_host,
+            "fetch_remote": self.fetch_remote,
             "batches": self.batches,
             "hit_rate": self.hit_rate,
+            "remote_miss_fraction": self.remote_miss_fraction,
         }
 
     def __str__(self) -> str:
-        return (f"CacheStats(hits={self.hits}, misses={self.misses}, "
+        return (f"CacheStats(hits={self.hits}, misses={self.misses} "
+                f"[host={self.misses_host} remote={self.misses_remote}], "
                 f"hit_rate={self.hit_rate:.4f}, evictions={self.evictions}, "
-                f"bytes_h2d={self.bytes_h2d}, batches={self.batches})")
+                f"bytes_h2d={self.bytes_h2d}, "
+                f"bytes_remote={self.bytes_remote}, batches={self.batches})")

@@ -1,0 +1,252 @@
+"""``TableStore`` — the pluggable tier interface of the embedding store.
+
+The PR-2 cache hard-wired two tiers: a device slot pool over a local
+host-numpy array.  Scale-out inference deployments hold tables on REMOTE
+hosts precisely because one node can't (capacity-driven scale-out —
+PAPERS.md), so the store is now a tier stack behind one small interface:
+
+  * :class:`SlotPool`   — tier "hbm": the fixed ``(T, S, D)`` device pool
+    the fused TBE kernel reads.  Rows are written by ONE flat scatter per
+    prefetch (jitted, pool donated — in-place on accelerators).
+  * :class:`HostStore`  — tier "host": the full ``(T, R, D)`` tables in
+    the serving host's memory (numpy); a fetch is a fancy-index gather
+    that crosses the host<->device link.
+  * :class:`RemoteStore` — tier "remote": every table row-split across
+    ``hosts`` ranks (host h owns rows ``[h*R/H, (h+1)*R/H)`` of every
+    table, the paper's RW layout §4.2); a fetch is ONE batched
+    ``comm.fetch_rows`` collective per prefetch — bulk ``psum_scatter``
+    or the device-initiated one-sided RDMA kernel
+    (kernels/onesided_a2a.onesided_fetch_rows), per ``backend``.
+
+The single-process simulation backs each "host" with one device of the
+local jax mesh (``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+on CPU, one chip per rank on a real slice); the serving rank is host
+``home`` (device 0), so rows it owns are HOST-tier traffic and rows
+owned by peers are REMOTE-tier traffic — :class:`repro.cache.CacheStats`
+keeps the split.
+
+Exactness contract is tier-independent: a fetched row's payload is
+bitwise the source table row whichever tier served it, so the pooled
+output stays bitwise-equal to the uncached oracle under ANY tier layout.
+"""
+from __future__ import annotations
+
+import abc
+import functools
+import warnings
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import comm
+from repro.utils.compat import shard_map
+
+
+def _pad_pow2(arrays):
+    """Pad each (M, ...) array to the next power of two by repeating its
+    last element — idempotent duplicates, bounds the jit shape count to
+    O(log M_max) instead of one program per distinct M."""
+    m = arrays[0].shape[0]
+    pad = (1 << (m - 1).bit_length()) - m
+    if not pad:
+        return arrays
+    return [np.concatenate([a, np.repeat(a[-1:], pad, axis=0)])
+            for a in arrays]
+
+
+class TableStore(abc.ABC):
+    """One tier of the embedding store: where row payloads live.
+
+    ``hosts``/``home``/``rows_per_host`` describe the tier's ownership
+    layout so :class:`repro.cache.manager.SlotPoolManager` can split a
+    prefetch plan by serving tier (home-owned rows vs peer-owned rows).
+    """
+
+    tier: str = "?"
+    hosts: int = 1
+    home: int = 0
+
+    @property
+    @abc.abstractmethod
+    def rows_per_host(self) -> int:
+        """Rows of each table owned by one host (R for single-host tiers)."""
+
+    @abc.abstractmethod
+    def fetch(self, t_ids: np.ndarray, row_ids: np.ndarray) -> np.ndarray:
+        """(M,) table ids x (M,) table-local row ids -> (M, D) payloads."""
+
+
+# ---------------------------------------------------------------------------
+# Hot tier: the HBM slot pool
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _scatter_rows(pool: jax.Array, addr: jax.Array,
+                  rows: jax.Array) -> jax.Array:
+    """Write fetched rows into the pool at flat addresses ``t*S + slot``.
+
+    Jitted with the pool DONATED so accelerator backends update the
+    buffer in place — O(M*D) HBM writes per prefetch, not an O(T*S*D)
+    whole-pool copy (an eager ``.at[].set`` cannot alias its input).
+    """
+    T, S, D = pool.shape
+    return pool.reshape(T * S, D).at[addr].set(rows).reshape(T, S, D)
+
+
+class SlotPool(TableStore):
+    """Tier "hbm": the fixed ``(T, S, D)`` device pool the kernel reads.
+
+    Never reallocated — ``scatter`` replaces the array functionally (the
+    donated jit updates it in place on accelerators), so the jitted
+    consumer compiles exactly once.
+    """
+
+    tier = "hbm"
+
+    def __init__(self, num_tables: int, slots: int, dim: int, dtype):
+        self.array = jnp.zeros((num_tables, slots, dim), dtype)
+
+    @property
+    def slots(self) -> int:
+        return self.array.shape[1]
+
+    @property
+    def rows_per_host(self) -> int:
+        return self.array.shape[1]
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.array.size) * self.array.dtype.itemsize
+
+    def fetch(self, t_ids, slot_ids) -> np.ndarray:
+        """Read resident payloads back (test/debug hook, device->host)."""
+        return np.asarray(self.array)[np.asarray(t_ids),
+                                      np.asarray(slot_ids)]
+
+    def scatter(self, flat_addr: np.ndarray, rows) -> None:
+        """One flat scatter of (M, D) ``rows`` at ``t*S + slot`` addresses."""
+        flat_addr, rows = _pad_pow2([np.asarray(flat_addr, np.int64),
+                                     np.asarray(rows)])
+        with warnings.catch_warnings():
+            # CPU backends skip donation with a warning; harmless
+            warnings.simplefilter("ignore")
+            self.array = _scatter_rows(
+                self.array, jnp.asarray(flat_addr), jnp.asarray(rows))
+
+
+# ---------------------------------------------------------------------------
+# Cold tier, local: host-resident numpy tables
+# ---------------------------------------------------------------------------
+
+class HostStore(TableStore):
+    """Tier "host": the full ``(T, R, D)`` tables in local host memory."""
+
+    tier = "host"
+
+    def __init__(self, tables):
+        self.tables = np.asarray(tables)
+        if self.tables.ndim != 3:
+            raise ValueError(
+                f"tables must be (T, R, D), got {self.tables.shape}")
+
+    @property
+    def rows_per_host(self) -> int:
+        return self.tables.shape[1]
+
+    def fetch(self, t_ids, row_ids) -> np.ndarray:
+        return self.tables[t_ids, row_ids]
+
+
+# ---------------------------------------------------------------------------
+# Cold tier, distributed: row shards on peer ranks
+# ---------------------------------------------------------------------------
+
+class RemoteStore(TableStore):
+    """Tier "remote": every table row-split across ``hosts`` ranks.
+
+    Host h's shard is the flat ``(T * R/H, D)`` block of rows
+    ``[h*R/H, (h+1)*R/H)`` of every table (owner-local address
+    ``t * R/H + r % (R/H)``).  ``fetch`` runs ONE jitted shard_map
+    ``comm.fetch_rows`` collective over the mesh per call (request count
+    padded to powers of two to bound program shapes) and returns the
+    payloads to the serving host — rows the home rank owns are part of
+    the same batched program but are accounted as HOST-tier traffic by
+    the manager's plan split.
+    """
+
+    tier = "remote"
+
+    def __init__(self, tables, *, hosts: Optional[int] = None,
+                 backend: str = "bulk", home: int = 0,
+                 axis_name: str = "hosts"):
+        tables = np.asarray(tables)
+        if tables.ndim != 3:
+            raise ValueError(f"tables must be (T, R, D), got {tables.shape}")
+        T, R, D = tables.shape
+        if backend not in ("bulk", "onesided"):
+            raise ValueError(f"unknown remote backend {backend!r}")
+        n_dev = len(jax.devices())
+        H = int(hosts) if hosts else n_dev
+        if H < 2:
+            raise ValueError(
+                f"RemoteStore needs >= 2 hosts (got {H}) — use HostStore "
+                f"(cold_tier='host') for a single-host cold tier")
+        if R % H:
+            raise ValueError(
+                f"rows_per_table ({R}) must divide evenly over {H} hosts")
+        if H > n_dev:
+            raise ValueError(
+                f"RemoteStore: {H} hosts > {n_dev} local devices — the "
+                f"single-process simulation backs each host with one device "
+                f"(set XLA_FLAGS=--xla_force_host_platform_device_count)")
+        self.hosts, self.home, self.backend = H, int(home), backend
+        self._rows_per_host = R // H
+        self.axis_name = axis_name
+        # (H, T * R/H, D): host h's flat shard, device-sharded over the mesh
+        shards = (tables.reshape(T, H, self._rows_per_host, D)
+                  .transpose(1, 0, 2, 3).reshape(H, T * self._rows_per_host,
+                                                 D))
+        from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+        self.mesh = Mesh(np.asarray(jax.devices()[:H]), (axis_name,))
+        self.shards = jax.device_put(
+            shards, NamedSharding(self.mesh, P(axis_name)))
+        # one-sided fetches run the Pallas RDMA kernel: real Mosaic
+        # lowering on TPU slices, the interpreter elsewhere (CPU tests).
+        # The mode is threaded per-call — building a store never flips the
+        # process-global comm.set_onesided_mode gate.
+        onesided_mode = ("tpu" if jax.default_backend() == "tpu"
+                         else "interpret") if backend == "onesided" else None
+
+        def _fetch(shards, addr, owner):
+            def inner(shard, a, o):
+                return comm.fetch_rows(shard[0], a, o, axis_name,
+                                       backend=backend,
+                                       onesided_mode=onesided_mode)
+            return shard_map(
+                inner, mesh=self.mesh,
+                in_specs=(P(axis_name), P(), P()), out_specs=P(),
+                check_vma=False)(shards, addr, owner)
+
+        self._fetch = jax.jit(_fetch)
+
+    @property
+    def rows_per_host(self) -> int:
+        return self._rows_per_host
+
+    def owner_of(self, row_ids: np.ndarray) -> np.ndarray:
+        return np.asarray(row_ids) // self._rows_per_host
+
+    def fetch(self, t_ids, row_ids) -> np.ndarray:
+        t_ids = np.asarray(t_ids, np.int64)
+        row_ids = np.asarray(row_ids, np.int64)
+        owner = (row_ids // self._rows_per_host).astype(np.int32)
+        local = (t_ids * self._rows_per_host
+                 + row_ids % self._rows_per_host).astype(np.int32)
+        m = local.shape[0]
+        local, owner = _pad_pow2([local, owner])
+        out = self._fetch(self.shards, jnp.asarray(local), jnp.asarray(owner))
+        # device->host roundtrip: the payloads land on the serving host
+        # (modeling NIC -> host RAM) before the pool scatter moves them h2d
+        return np.asarray(out)[:m]

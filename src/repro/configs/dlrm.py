@@ -34,9 +34,21 @@ class DLRMConfig:
     kernel_mode: str = "auto"            # auto | reference | pallas | interpret
     fused: bool = True                   # table-batched (TBE) kernel path
     # tiered frequency-aware cache (repro/cache/): HBM slot-pool rows per
-    # table over host-resident cold tables; 0 = tables fully device-resident
+    # table over a cold tier; 0 = tables fully device-resident
     cache_rows: int = 0
     cache_policy: str = "lfu"            # lfu | lru
+    # cold tier of the cached path: "host" keeps the full tables in the
+    # serving host's memory; "remote" row-splits them over remote_hosts
+    # peer ranks, misses fetched by ONE batched comm.fetch_rows collective
+    # per flush ("bulk" psum_scatter | "onesided" Pallas RDMA puts)
+    cold_tier: str = "host"              # host | remote
+    remote_hosts: int = 0                # 0 = every local device backs a host
+    remote_backend: str = "bulk"         # bulk | onesided
+    # offline ids_freq_mapping seeding the LFU counters + pre-admitting the
+    # top rows so the engine skips the cold-start miss burst (data, not
+    # architecture: excluded from config equality/hash)
+    warmup_freqs: object = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     def __post_init__(self):
         if self.interaction == "dot" and \
@@ -59,6 +71,10 @@ class DLRMConfig:
             fused=self.fused,
             cache_rows=self.cache_rows,
             cache_policy=self.cache_policy,
+            cold_tier=self.cold_tier,
+            remote_hosts=self.remote_hosts,
+            remote_backend=self.remote_backend,
+            warmup_freqs=self.warmup_freqs,
         )
 
     @property

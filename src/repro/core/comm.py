@@ -40,7 +40,8 @@ import numpy as np
 
 @dataclasses.dataclass
 class CollectiveEvent:
-    op: str            # all_to_all | all_gather | reduce_scatter | all_reduce | permute
+    op: str            # all_to_all | all_gather | reduce_scatter | all_reduce
+    #                  # | permute | fetch_rows
     bytes_in: int      # local payload bytes entering the collective
     axis_size: int
     backend: str
@@ -146,6 +147,56 @@ def reduce_scatter(
     return jax.lax.psum_scatter(
         x, axis_name, scatter_dimension=scatter_axis, tiled=False
     )
+
+
+def fetch_rows(shard, local_addr, owner, axis_name, *, backend="bulk",
+               onesided_mode=None):
+    """Batched cross-rank row fetch — the tiered cache's cold-tier transport.
+
+    Each rank holds a flat ``(rows_local, D)`` slice of the cluster-wide
+    embedding row space and wants M rows scattered across its peers:
+
+      shard:      (rows_local, D) this rank's row slice (all tables
+                  concatenated, owner-local flat addressing).
+      local_addr: (M,) owner-local flat address of each row THIS rank wants.
+      owner:      (M,) owning rank of each requested row.
+
+    Returns ``(M, D)`` — the requested payloads.  Protocol (both
+    transports): replicate the small request list (the index traffic of
+    the paper's phase-1 permute), each owner gathers the rows it holds,
+    then the payloads move back to the requester:
+
+      * ``backend="bulk"``   — one ``psum_scatter`` over the stacked
+        (E, M, D) contributions (host-launched bulk collective);
+      * ``backend="onesided"`` (when enabled via :func:`set_onesided_mode`)
+        — per-row device-initiated RDMA puts
+        (kernels/onesided_a2a.onesided_fetch_rows), the NVSHMEM-analogue
+        row fetch that wins at embedding-row message sizes.
+
+    Each row has exactly one owner, so the sum-over-owners is a select.
+    Call INSIDE shard_map over ``axis_name``.  One CollectiveEvent
+    (op="fetch_rows") is recorded with the stacked payload bytes so
+    benchmarks can account the traffic without HLO parsing.
+
+    ``onesided_mode`` overrides the process-global
+    :func:`set_onesided_mode` gate for THIS call ("interpret" | "tpu" |
+    "off") — RemoteStore threads it explicitly so building a store never
+    has to flip global tracing state.
+    """
+    rank = jax.lax.axis_index(axis_name)
+    req_addr = jax.lax.all_gather(local_addr, axis_name)      # (E, M)
+    req_owner = jax.lax.all_gather(owner, axis_name)          # (E, M)
+    mine = req_owner == rank
+    safe = jnp.where(mine, req_addr, 0)
+    contrib = shard[safe] * mine[..., None].astype(shard.dtype)  # (E, M, D)
+    _record("fetch_rows", contrib, axis_name, backend)
+    mode = _ONESIDED_MODE if onesided_mode is None else onesided_mode
+    if backend == "onesided" and mode != "off":
+        from repro.kernels.onesided_a2a import onesided_fetch_rows
+        return onesided_fetch_rows(
+            contrib, axis_name, interpret=mode == "interpret")
+    return jax.lax.psum_scatter(
+        contrib, axis_name, scatter_dimension=0, tiled=False)
 
 
 def permute_ring(x, axis_name, *, shift=1, backend="bulk"):

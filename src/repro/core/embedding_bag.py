@@ -81,12 +81,27 @@ class EmbeddingBagConfig:
     hot_rows: int = 0
     # --- tiered frequency-aware cache (repro/cache/) ---
     # cache_rows: size S of the per-table HBM slot pool serving hot rows
-    # over the host-resident cold tables; 0 disables the cache path.
-    # Unlike the static hot_rows split, residency is DYNAMIC: an id->slot
-    # indirection table plus LFU/LRU admission-eviction driven by batch
-    # frequency counters — see pooled_lookup_cached / repro.cache.
+    # over a cold tier; 0 disables the cache path.  Unlike the static
+    # hot_rows split, residency is DYNAMIC: an id->slot indirection table
+    # plus LFU/LRU admission-eviction driven by batch frequency counters
+    # — see pooled_lookup_cached / repro.cache.
     cache_rows: int = 0
     cache_policy: str = "lfu"        # lfu | lru
+    # cold_tier: where non-resident rows live (repro/cache/tiers.py).
+    #   "host"   — the serving host's memory (numpy), misses cross the
+    #              host<->device link;
+    #   "remote" — row-split across remote_hosts peer ranks, misses batch
+    #              into one comm.fetch_rows collective per prefetch.
+    cold_tier: str = "host"          # host | remote
+    remote_hosts: int = 0            # 0 = every local device backs a host
+    remote_backend: str = "bulk"     # bulk | onesided (Pallas RDMA fetch)
+    # warmup_freqs: offline ids_freq_mapping — (T, R) or (R,) logged row
+    # frequencies seeding the LFU counters AND pre-admitting each table's
+    # top-cache_rows rows at construction, so serving skips the
+    # cold-start miss burst (CacheEmbedding-style).  Excluded from
+    # equality/hash: it is data, not architecture.
+    warmup_freqs: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False)
 
     @property
     def table_bytes(self) -> int:
@@ -485,10 +500,12 @@ def pooled_lookup_hot(
 def make_cache(tables, cfg: EmbeddingBagConfig):
     """Build the dynamic tiered cache for ``cfg`` (cache_rows > 0).
 
-    The returned :class:`repro.cache.CachedEmbeddingBag` keeps the full
-    ``tables`` host-resident and serves lookups from an HBM slot pool of
-    ``cfg.cache_rows`` rows per table — the dynamic successor of the
-    static ``hot_rows`` replica split above.
+    The returned :class:`repro.cache.CachedEmbeddingBag` serves lookups
+    from an HBM slot pool of ``cfg.cache_rows`` rows per table over the
+    cold tier named by ``cfg.cold_tier`` — the full ``tables`` in local
+    host memory, or row-shards on ``cfg.remote_hosts`` peer ranks fetched
+    through ``comm.fetch_rows`` — the dynamic successor of the static
+    ``hot_rows`` replica split above.
     """
     from repro.cache import CachedEmbeddingBag   # deferred: cache -> core
 

@@ -75,6 +75,9 @@ _OP_FACTOR = {
     "reduce_scatter": lambda n: (n - 1) / n,
     "all_to_all": lambda n: (n - 1) / n,
     "broadcast": lambda n: 1.0,
+    # the tiered cache's batched row fetch (comm.fetch_rows): of the missed
+    # row payload, the (n-1)/n fraction owned by peer hosts crosses the wire
+    "fetch_rows": lambda n: (n - 1) / n,
 }
 
 
@@ -237,34 +240,69 @@ def zipf_hit_rate(a: float, rows: int, cache_rows: int) -> float:
     return min(1.0, max(head_only, with_clamp) / zeta)
 
 
-def cached_phase_times(
-    w: EmbeddingWorkload, hw: Hardware, *, hit_rate: float
+def tiered_phase_times(
+    w: EmbeddingWorkload, hw: Hardware, *, hit_rate: float, hosts: int = 1,
+    onesided: bool = False,
 ) -> Dict[str, float]:
-    """Per-phase seconds of the tiered-cache serving path on ONE device.
+    """Per-phase seconds of the tiered serving path whose cold tier spans
+    ``hosts`` hosts (host 0 = the serving rank, RW row split §4.2).
 
-    ``prefetch_h2d``: the miss fraction of the batch's rows crosses the
-    host link before scoring (repro/cache prefetch protocol);
-    ``gather``: every lookup then streams from the HBM slot pool through
-    the one fused TBE launch — identical to the local gather phase.
+      ``gather``       — every lookup streams from the HBM slot pool
+                         through the one fused TBE launch, identical to
+                         the local gather phase;
+      ``prefetch_h2d`` — ALL missed rows cross the serving host's
+                         host<->device link (home-owned rows straight
+                         from host RAM, peer-owned rows after they land
+                         on the NIC), so remote misses pay BOTH links;
+      ``fetch_remote`` — the (hosts-1)/hosts fraction of missed rows
+                         owned by peers crosses the network in ONE
+                         batched ``comm.fetch_rows`` collective per
+                         prefetch (bulk vs one-sided transport — the
+                         embedding-row message sizes where the paper's
+                         Fig. 1 crossover lives).
+
     The permute/reduce-scatter phases of the distributed pipeline are
     GONE: that is the whole trade the cache makes.
 
     Miss traffic is charged once per missed LOOKUP while the real bag
-    moves each missed ROW once (CacheStats.bytes_h2d); the two agree at
-    steady state, where misses live in the zipf tail and a cold row
-    almost never repeats within a batch — for cold caches this is an
-    upper bound on the transfer.
+    moves each missed ROW once (CacheStats.bytes_h2d/bytes_remote); the
+    two agree at steady state, where misses live in the zipf tail and a
+    cold row almost never repeats within a batch — for cold caches this
+    is an upper bound on the transfer.
     """
     lookups = w.batch_per_device * w.num_tables * w.pooling
     row_bytes = w.dim * w.dtype_bytes
     miss_bytes = (1.0 - hit_rate) * lookups * row_bytes
-    prefetch = 0.0
-    if miss_bytes > 0:
-        prefetch = hw.gather_overhead_s + miss_bytes / hw.host_Bps
-    return {
-        "prefetch_h2d": prefetch,
+    out = {
+        "prefetch_h2d": 0.0,
+        "fetch_remote": 0.0,
         "gather": hw.gather_overhead_s + lookups * row_bytes / hw.hbm_Bps,
     }
+    if miss_bytes > 0:
+        out["prefetch_h2d"] = hw.gather_overhead_s + miss_bytes / hw.host_Bps
+        if hosts > 1:
+            t = hw.onesided if onesided else hw.bulk
+            out["fetch_remote"] = collective_time(
+                "fetch_rows", miss_bytes, hosts, t)
+    return out
+
+
+def tiered_embedding_bag_time(
+    w: EmbeddingWorkload, hw: Hardware, *, hit_rate: float, hosts: int = 1,
+    onesided: bool = False,
+) -> float:
+    return sum(tiered_phase_times(
+        w, hw, hit_rate=hit_rate, hosts=hosts, onesided=onesided).values())
+
+
+def cached_phase_times(
+    w: EmbeddingWorkload, hw: Hardware, *, hit_rate: float
+) -> Dict[str, float]:
+    """Single-host special case of :func:`tiered_phase_times` (local cold
+    tier — the PR-2 layout: no ``fetch_remote`` phase exists)."""
+    out = tiered_phase_times(w, hw, hit_rate=hit_rate, hosts=1)
+    del out["fetch_remote"]
+    return out
 
 
 def cached_embedding_bag_time(
@@ -288,6 +326,26 @@ def cache_speedup_vs_distributed(
     dist = embedding_bag_time(w, n, hw, onesided=onesided)
     cached = cached_embedding_bag_time(w, hw, hit_rate=hit_rate)
     return dist / cached
+
+
+def tiered_speedup_vs_distributed(
+    table_bytes: float, w: EmbeddingWorkload, hw: Hardware, *,
+    hit_rate: float, hosts: int, fetch_onesided: bool = False,
+    dist_onesided: bool = False,
+) -> float:
+    """Fig. 9 recovery with a CLUSTER-WIDE cold tier.
+
+    One serving device whose slot pool fronts tables row-split over
+    ``hosts`` hosts (misses fetched cross-host) vs the paper's N-device
+    RW pipeline for the same table bytes.  This is the deployment the
+    scale-out papers describe — the table doesn't fit one node, but only
+    the MISS traffic pays the network, not every lookup's phase 1-3.
+    """
+    n = devices_for_table(table_bytes, hw)
+    dist = embedding_bag_time(w, n, hw, onesided=dist_onesided)
+    tiered = tiered_embedding_bag_time(
+        w, hw, hit_rate=hit_rate, hosts=hosts, onesided=fetch_onesided)
+    return dist / tiered
 
 
 # ---------------------------------------------------------------------------

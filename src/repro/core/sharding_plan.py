@@ -15,23 +15,39 @@ Strategies considered per table:
   * CW — split columns: local gather of D/E slice, output all-gather;
     balances memory, multiplies per-row DMA descriptors by E (bad for
     small dims — the planner penalizes dim/E < 32 lanes).
+  * CACHED — RecShard-style joint placement/statistics decision: spend
+    leftover HBM budget on a slot pool (repro/cache/) serving the
+    table's zipf-hot rows, with the cold rows host- or cluster-resident
+    behind the tiered fetch.  Priced by ``perf_model.zipf_hit_rate``
+    (access statistics) x ``perf_model.tiered_phase_times`` (remote-miss
+    aware serving cost); only considered when the caller supplies the
+    traffic skew (``zipf_a``), since a cache without skew is just a
+    smaller table.
 
-Greedy assignment: sort tables by bytes descending; TW-pack into the
-least-loaded shard while it fits the per-shard budget; RW the rest
-(CW only when the caller forces it — it exists for completeness and for
-the benchmark sweeps, matching the paper's taxonomy).
+Greedy assignment: sort tables by bytes descending; per table pick the
+cheapest strategy that fits — TW-pack into the least-loaded shard while
+it fits the per-shard budget, CACHED charges only its pool bytes to the
+serving shard, RW the rest (CW only when the caller forces it — it
+exists for completeness and for the benchmark sweeps, matching the
+paper's taxonomy).
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Sequence
+from typing import List, Optional, Sequence, Tuple
 
 from repro.core.perf_model import (
     EmbeddingWorkload,
     Hardware,
     TPU_V5E,
     collective_time,
+    tiered_embedding_bag_time,
+    zipf_hit_rate,
 )
+
+# pool-size candidates as a fraction of the table's rows — the planner
+# prices each and keeps the cheapest that fits the leftover HBM budget
+CACHE_RATIOS = (0.005, 0.01, 0.02, 0.05, 0.10, 0.20)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -50,9 +66,11 @@ class TableSpec:
 @dataclasses.dataclass
 class Placement:
     table: TableSpec
-    strategy: str          # "table" | "row" | "column"
-    shard: int             # owning shard for TW, -1 otherwise
+    strategy: str          # "table" | "row" | "column" | "cached"
+    shard: int             # owning shard for TW/CACHED, -1 otherwise
     est_time_s: float
+    cache_rows: int = 0    # slot-pool rows per table ("cached" only)
+    est_hit_rate: float = 0.0
 
 
 @dataclasses.dataclass
@@ -64,6 +82,12 @@ class ShardingPlan:
         for p in self.placements:
             if p.table.name == name:
                 return p.strategy
+        raise KeyError(name)
+
+    def cache_rows_of(self, name: str) -> int:
+        for p in self.placements:
+            if p.table.name == name:
+                return p.cache_rows
         raise KeyError(name)
 
 
@@ -84,6 +108,33 @@ def _rw_time(t: TableSpec, batch: int, n: int, hw: Hardware) -> float:
     )
 
 
+def _cached_candidate(
+    t: TableSpec, batch: int, hw: Hardware, *, zipf_a: float,
+    budget_left: float, hosts: int, onesided: bool,
+) -> Optional[Tuple[float, int, float]]:
+    """Cheapest (time, cache_rows, hit_rate) pool that fits ``budget_left``.
+
+    The cold rows live OFF the HBM budget (host RAM of ``hosts`` hosts);
+    only the slot pool is charged to the serving shard.  Returns None
+    when no candidate pool fits.
+    """
+    w = EmbeddingWorkload(num_tables=1, batch_per_device=batch,
+                          pooling=t.pooling, dim=t.dim,
+                          dtype_bytes=t.dtype_bytes)
+    best = None
+    for ratio in CACHE_RATIOS:
+        cache_rows = max(1, int(t.rows * ratio))
+        pool_bytes = cache_rows * t.dim * t.dtype_bytes
+        if pool_bytes > budget_left:
+            continue
+        hr = zipf_hit_rate(zipf_a, t.rows, cache_rows)
+        time = tiered_embedding_bag_time(
+            w, hw, hit_rate=hr, hosts=hosts, onesided=onesided)
+        if best is None or time < best[0]:
+            best = (time, cache_rows, hr)
+    return best
+
+
 def plan(
     tables: Sequence[TableSpec],
     *,
@@ -91,16 +142,41 @@ def plan(
     batch_per_shard: int,
     hbm_budget_bytes: float,
     hw: Hardware = TPU_V5E,
+    zipf_a: Optional[float] = None,
+    cache_hosts: int = 1,
+    cache_backend: str = "bulk",
 ) -> ShardingPlan:
-    """Greedy TW-pack + RW-fallback planner (see module docstring)."""
+    """Greedy cheapest-fit planner (see module docstring).
+
+    ``zipf_a`` enables the fourth "cached" strategy: the caller's
+    measured (or assumed) traffic skew, which prices a slot pool of
+    ``cache_rows`` via the closed-form steady-state hit rate.
+    ``cache_hosts``/``cache_backend`` describe where a cached table's
+    cold rows live — 1: the serving host's RAM; >1: row-split over that
+    many hosts with misses fetched by ``comm.fetch_rows`` over the named
+    transport ("bulk" | "onesided").
+    """
     loads = [0] * num_shards
     placements: List[Placement] = []
     for t in sorted(tables, key=lambda t: -t.bytes):
         tw = _tw_time(t, batch_per_shard, num_shards, hw)
         rw = _rw_time(t, batch_per_shard, num_shards, hw)
         target = min(range(num_shards), key=lambda s: loads[s])
-        fits = loads[target] + t.bytes <= hbm_budget_bytes
-        if fits and tw <= rw:
+        fits_tw = loads[target] + t.bytes <= hbm_budget_bytes
+        cached = None
+        if zipf_a is not None:
+            cached = _cached_candidate(
+                t, batch_per_shard, hw, zipf_a=zipf_a,
+                budget_left=hbm_budget_bytes - loads[target],
+                hosts=cache_hosts, onesided=cache_backend == "onesided")
+        if cached is not None and cached[0] < rw \
+                and (not fits_tw or cached[0] < tw):
+            time, cache_rows, hr = cached
+            loads[target] += cache_rows * t.dim * t.dtype_bytes
+            placements.append(Placement(t, "cached", target, time,
+                                        cache_rows=cache_rows,
+                                        est_hit_rate=hr))
+        elif fits_tw and tw <= rw:
             loads[target] += t.bytes
             placements.append(Placement(t, "table", target, tw))
         else:

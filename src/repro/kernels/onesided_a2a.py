@@ -84,6 +84,64 @@ def onesided_reduce_scatter(x: jax.Array, axis_name: str, *,
     return exchanged.sum(axis=0)
 
 
+def _fetch_rows_kernel(x_ref, o_ref, send_sem, recv_sem, *, axis_name: str,
+                       num_ranks: int, num_rows: int):
+    """Per-ROW remote puts: the row-fetch transport of the tiered cache.
+
+    ``x_ref (E, M, D)``: rank r's contribution to each peer's M requested
+    rows (the rows r owns, zeros elsewhere).  Every (dst, m) pair is one
+    fine-grained put of a single D-row — message size = one embedding row,
+    exactly the small-message regime where device-initiated transport wins
+    (§3 Fig. 1) — landing in the peer's ``o_ref[my_id, m]`` slot.  All
+    E*M puts start back-to-back (put_nbi) before any completion wait."""
+    my_id = jax.lax.axis_index(axis_name)
+    copies = []
+    for i in range(num_ranks):
+        dst = jax.lax.rem(my_id + i + 1, num_ranks)   # rotated schedule
+        for m in range(num_rows):
+            copies.append(pltpu.make_async_remote_copy(
+                src_ref=x_ref.at[dst, m],
+                dst_ref=o_ref.at[my_id, m],
+                send_sem=send_sem,
+                recv_sem=recv_sem,
+                device_id=dst,
+                device_id_type=pltpu.DeviceIdType.LOGICAL,
+            ))
+    for c in copies:
+        c.start()
+    for c in copies:
+        c.wait()
+
+
+def onesided_fetch_rows(contrib: jax.Array, axis_name: str, *,
+                        interpret: bool = False) -> jax.Array:
+    """Row-fetch gather: ``contrib (E, M, D)`` -> ``(M, D)`` fetched rows.
+
+    ``contrib[q]`` holds the rows of peer q's M requests that THIS rank
+    owns (zeros elsewhere; every row has exactly one owner).  The kernel
+    pushes each row to its requester with a device-initiated one-sided
+    put (one DMA per row — no host-launched collective scheduling on the
+    critical path), then the requester sums over owners, which for
+    single-owner rows is a select.  Semantically identical to the bulk
+    ``psum_scatter`` fallback in ``core/comm.fetch_rows`` (verified in
+    interpret mode by tests/_tiering_checks.py).
+
+    Must run inside shard_map over ``axis_name`` == contrib.shape[0]."""
+    num_ranks, num_rows = contrib.shape[0], contrib.shape[1]
+    exchanged = pl.pallas_call(
+        functools.partial(_fetch_rows_kernel, axis_name=axis_name,
+                          num_ranks=num_ranks, num_rows=num_rows),
+        out_shape=jax.ShapeDtypeStruct(contrib.shape, contrib.dtype),
+        scratch_shapes=[pltpu.SemaphoreType.DMA, pltpu.SemaphoreType.DMA],
+        compiler_params=CompilerParams(
+            collective_id=9,
+            has_side_effects=True,
+        ),
+        interpret=interpret,
+    )(contrib)
+    return exchanged.sum(axis=0)
+
+
 def onesided_ring_permute(x: jax.Array, axis_name: str, *, shift: int = 1,
                           interpret: bool = False) -> jax.Array:
     """One-sided ring shift (building block for pipelined schedules)."""

@@ -200,11 +200,15 @@ class DLRMEngine:
     costs a single gather kernel launch regardless of the table count.
     Fixed shapes mean the forward compiles exactly once.
 
-    With ``cfg.cache_rows > 0`` the tables live host-resident behind a
-    tiered cache (repro/cache/): ``flush`` PREFETCHES the micro-batch's
-    working set into the HBM slot pool, remaps ids to slots, and runs
-    the same jitted forward over the pool — the pool is a same-shape
-    argument every flush, so admission/eviction never recompiles.
+    With ``cfg.cache_rows > 0`` the tables live behind a tiered cache
+    (repro/cache/): ``flush`` PREFETCHES the micro-batch's working set
+    into the HBM slot pool, remaps ids to slots, and runs the same
+    jitted forward over the pool — the pool is a same-shape argument
+    every flush, so admission/eviction never recompiles.  The cold tier
+    is ``cfg.cold_tier``: the serving host's memory, or row-shards on
+    ``cfg.remote_hosts`` peer ranks fetched cross-host at flush
+    (``comm.fetch_rows``); ``cfg.warmup_freqs`` pre-admits the logged-hot
+    rows so the first flushes skip the cold-start miss burst.
     """
 
     def __init__(self, params, cfg: DLRMConfig, batch_size: int,
@@ -217,10 +221,10 @@ class DLRMEngine:
         if cfg.cache_rows > 0:
             if ctx is not None:
                 raise NotImplementedError(
-                    "DLRMEngine: the tiered cache path serves from a "
-                    "single device (cache_rows > 0 with a ParallelContext "
-                    "is not supported — see ROADMAP: cache -> multi-host "
-                    "tiering)")
+                    "DLRMEngine: the tiered cache path scores on a single "
+                    "serving device (cache_rows > 0 with a ParallelContext "
+                    "is not supported) — a cluster-wide COLD tier is "
+                    "cfg.cold_tier='remote', which manages its own mesh")
             if cfg.cache_rows < cfg.pooling:
                 raise ValueError(
                     f"cache_rows ({cfg.cache_rows}) must be >= pooling "
@@ -328,7 +332,12 @@ class DLRMEngine:
         return {req.rid: float(p[i]) for i, req in enumerate(todo)}
 
     def cache_stats(self):
-        """The tiered cache's CacheStats (None when cache_rows == 0)."""
+        """The tiered cache's CacheStats (None when cache_rows == 0).
+
+        Miss traffic is split by source tier: ``bytes_h2d`` /
+        ``misses_host`` for rows the serving host owns, ``bytes_remote``
+        / ``misses_remote`` for rows fetched from peer hosts — see
+        repro/cache/stats.py for the counting semantics."""
         return None if self.cache is None else self.cache.stats
 
     def run_to_completion(self) -> Dict[int, float]:
