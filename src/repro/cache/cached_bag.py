@@ -32,6 +32,7 @@ whichever tier served it).
 """
 from __future__ import annotations
 
+import time
 from typing import Optional
 
 import jax
@@ -44,6 +45,16 @@ from repro.cache.tiers import HostStore, RemoteStore, SlotPool, TableStore
 from repro.core.embedding_bag import EmbeddingBagConfig
 from repro.core.jagged import JaggedBatch
 from repro.kernels import ops as kops
+
+
+def _valid_mask(indices: np.ndarray, lengths: Optional[np.ndarray]):
+    """(T, B, L) ids + (T, B) lengths -> (indices, (T, B, L) bool valid);
+    ``lengths`` None means every slot is a live lookup."""
+    indices = np.asarray(indices)
+    if lengths is None:
+        return indices, np.ones(indices.shape, bool)
+    L = indices.shape[-1]
+    return indices, np.arange(L) < np.asarray(lengths)[..., None]
 
 
 def make_cold_store(tables, cfg: EmbeddingBagConfig) -> TableStore:
@@ -61,7 +72,8 @@ class CachedEmbeddingBag:
     def __init__(self, tables, cfg: EmbeddingBagConfig, *,
                  cache_rows: Optional[int] = None,
                  policy: Optional[str] = None,
-                 cold_store: Optional[TableStore] = None):
+                 cold_store: Optional[TableStore] = None,
+                 stats: Optional[CacheStats] = None):
         if cfg.combiner not in ("sum", "mean"):
             raise NotImplementedError(
                 f"CachedEmbeddingBag: combiner {cfg.combiner!r} "
@@ -84,7 +96,9 @@ class CachedEmbeddingBag:
             policy if policy is not None else cfg.cache_policy,
             rows_per_host=self.cold.rows_per_host, home=self.cold.home)
         self.hot = SlotPool(T, self.mgr.S, D, self.dtype)
-        self.stats = CacheStats()
+        # stats may be SHARED: the double-buffered pipeline pool passes
+        # one CacheStats so every buffer's traffic lands in one record
+        self.stats = stats if stats is not None else CacheStats()
         self.row_bytes = D * self.dtype.itemsize
         if cfg.warmup_freqs is not None:
             self.mgr.seed_frequencies(np.asarray(cfg.warmup_freqs))
@@ -119,24 +133,22 @@ class CachedEmbeddingBag:
         committed residency for the fetched rows, so any error between
         the cold fetch and the pool scatter rolls that back
         (``invalidate_fetch``) — no slot ever claims an uncopied row."""
+        t0 = time.perf_counter()
+        scatter_s = 0.0
         if plan.fetch_rows.size:
             try:
                 rows = self.cold.fetch(plan.fetch_tables, plan.fetch_rows)
-                addr = plan.fetch_tables.astype(np.int64) * self.mgr.S \
-                    + plan.fetch_slots
-                self.hot.scatter(addr, rows)
+                ts = time.perf_counter()
+                self.hot.scatter(plan.flat_addr(self.mgr.S), rows)
+                scatter_s = time.perf_counter() - ts
             except BaseException:
                 self.mgr.invalidate_fetch(plan)
                 raise
-        self.stats.update(
-            hits=plan.hits, misses=plan.misses,
-            misses_host=plan.misses_host, misses_remote=plan.misses_remote,
-            evictions=plan.evictions,
-            bytes_h2d=plan.fetch_host_rows * self.row_bytes,
-            bytes_remote=plan.fetch_remote_rows * self.row_bytes,
-            fetch_host=plan.fetch_host_rows,
-            fetch_remote=plan.fetch_remote_rows,
-            count_batch=count_batch)
+        self.stats.add_time("prefetch",
+                            time.perf_counter() - t0 - scatter_s)
+        self.stats.add_time("scatter", scatter_s)
+        self.stats.update(**plan.stats_kwargs(self.row_bytes),
+                          count_batch=count_batch)
 
     # -- tier-1 protocol: prefetch then lookup -------------------------------
 
@@ -149,13 +161,9 @@ class CachedEmbeddingBag:
         returns the slot-remapped indices.  ``lengths`` None means every
         slot valid.
         """
-        indices = np.asarray(indices)
-        if lengths is None:
-            valid = np.ones(indices.shape, bool)
-        else:
-            L = indices.shape[-1]
-            valid = np.arange(L) < np.asarray(lengths)[..., None]
-        plan = self.mgr.prepare(indices, valid)
+        t0 = time.perf_counter()
+        plan = self.mgr.prepare(*_valid_mask(indices, lengths))
+        self.stats.add_time("prefetch", time.perf_counter() - t0)
         self._apply_fetch(plan, count_batch=True)
         return plan.remapped
 

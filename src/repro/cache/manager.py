@@ -58,6 +58,7 @@ class PrefetchPlan:
     fetch_slots: np.ndarray   # (M,) int64 destination slot of each row
     fetch_owner: np.ndarray = None   # (M,) int32 owning host of each row
     home: int = 0             # the serving host's rank in the cold tier
+    epoch: int = 0            # pool epoch this plan's batch is SERVED in
     hits: int = 0             # per-lookup (see stats.py counting semantics)
     misses: int = 0
     misses_host: int = 0      # misses whose row the serving host owns
@@ -74,6 +75,24 @@ class PrefetchPlan:
     def fetch_host_rows(self) -> int:
         """Unique fetched rows the serving host owns (h2d traffic)."""
         return int(self.fetch_rows.size - self.fetch_remote_rows)
+
+    def flat_addr(self, slots: int) -> np.ndarray:
+        """Flat pool addresses ``t * S + slot`` of the fetched rows —
+        the SlotPool.scatter address layout, in one place."""
+        return self.fetch_tables.astype(np.int64) * slots + self.fetch_slots
+
+    def stats_kwargs(self, row_bytes: int) -> dict:
+        """The CacheStats.update counters this plan accounts for — used
+        by both the serialized bag and the pipelined pool so the two
+        paths can never diverge in accounting."""
+        return dict(
+            hits=self.hits, misses=self.misses,
+            misses_host=self.misses_host, misses_remote=self.misses_remote,
+            evictions=self.evictions,
+            bytes_h2d=self.fetch_host_rows * row_bytes,
+            bytes_remote=self.fetch_remote_rows * row_bytes,
+            fetch_host=self.fetch_host_rows,
+            fetch_remote=self.fetch_remote_rows)
 
 
 class SlotPoolManager:
@@ -97,6 +116,11 @@ class SlotPoolManager:
         self.freq = np.zeros((self.T, self.R), np.int64)
         self.last_used = np.full((self.T, self.S), -1, np.int64)
         self.tick = 0
+        # pool epoch: advanced by the pipeline's buffer swap.  prepare()
+        # plans for the CURRENT epoch (serialized serving: admit-then-
+        # read); prepare_next() plans for epoch+1 — the batch admitted
+        # NOW but served only after the owning buffer swaps live.
+        self.epoch = 0
 
     def _owner(self, row_ids: np.ndarray) -> np.ndarray:
         """Owning host of each row id under the cold tier's row split."""
@@ -185,11 +209,38 @@ class SlotPoolManager:
             fetch_slots=cat(plan_s, np.int64),
             fetch_owner=self._owner(fetch_rows),
             home=self.home,
+            epoch=self.epoch,
             hits=hits, misses=misses,
             misses_host=misses - misses_remote,
             misses_remote=misses_remote,
             evictions=evictions,
         )
+
+    # -- pipelined serving: epoch-aware admission (repro/pipeline/) ----------
+
+    def prepare_next(self, indices: np.ndarray,
+                     valid: np.ndarray) -> PrefetchPlan:
+        """Plan the NEXT micro-batch's working set at admission time.
+
+        Identical admission/eviction to :meth:`prepare` — the manager
+        already knows the next batch's working set when it is submitted
+        — but the returned plan is stamped for epoch ``self.epoch + 1``:
+        its scatter targets the SHADOW buffer while the live buffer is
+        still being read, and the batch is served only after the swap
+        calls :meth:`advance_epoch`.  Committing a plan whose epoch does
+        not match the buffer's next epoch means a swap was dropped (the
+        plan is stale) and must be refused — see
+        ``DoubleBufferedSlotPool.commit_next``.
+        """
+        plan = self.prepare(indices, valid)
+        plan.epoch = self.epoch + 1
+        return plan
+
+    def advance_epoch(self) -> int:
+        """The owning buffer swapped live: its pool now serves the epoch
+        the last ``prepare_next`` plan targeted."""
+        self.epoch += 1
+        return self.epoch
 
     # -- offline warmup (CacheEmbedding-style ids_freq_mapping) --------------
 

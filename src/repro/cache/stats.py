@@ -26,6 +26,22 @@ Counting semantics (matched by the numpy simulation in tests/test_cache.py):
   * ``fetch_host`` / ``fetch_remote`` count the unique rows each cold
     tier actually moved (warmup admission counts here too, with zero
     hits/misses — it happens before any lookup).
+
+Stage timers (PR 4, the pipelined serving subsystem): the SAME spans are
+recorded whichever engine serves, so the serialized and pipelined paths
+are directly comparable from ``DLRMEngine.cache_stats()``:
+
+  * ``prefetch_s`` — wall-clock of the host-side admission metadata
+    (``SlotPoolManager.prepare``) plus the cold-tier row fetch;
+  * ``scatter_s``  — wall-clock of dispatching the flat pool scatter
+    (async dispatch: the device may still be writing when it returns);
+  * ``forward_s``  — forward dispatch until the scores are materialized
+    on the host;
+  * ``overlap_s``  — prefetch-side wall-clock that ran CONCURRENTLY with
+    an in-flight forward (always 0 for the serialized engine; the
+    pipeline scheduler measures it from its stage spans).  The
+    ``overlap_fraction`` property is the share of prefetch time the
+    pipeline actually hid under compute — observable, not assumed.
 """
 from __future__ import annotations
 
@@ -47,6 +63,13 @@ class CacheStats:
     fetch_host: int = 0
     fetch_remote: int = 0
     batches: int = 0
+    # per-stage wall-clock spans (seconds) — see module docstring
+    prefetch_s: float = 0.0
+    scatter_s: float = 0.0
+    forward_s: float = 0.0
+    overlap_s: float = 0.0
+
+    STAGES = ("prefetch", "scatter", "forward", "overlap")
 
     @property
     def lookups(self) -> int:
@@ -56,6 +79,20 @@ class CacheStats:
     def hit_rate(self) -> float:
         n = self.lookups
         return self.hits / n if n else 0.0
+
+    @property
+    def overlap_fraction(self) -> float:
+        """Share of prefetch wall-clock that ran under an in-flight
+        forward (0 for the serialized engine — nothing overlaps)."""
+        return min(1.0, self.overlap_s / self.prefetch_s) \
+            if self.prefetch_s > 0 else 0.0
+
+    def add_time(self, stage: str, seconds: float) -> None:
+        """Accumulate ``seconds`` of wall-clock into a stage timer."""
+        if stage not in self.STAGES:
+            raise ValueError(
+                f"unknown stage {stage!r}; pick one of {self.STAGES}")
+        setattr(self, stage + "_s", getattr(self, stage + "_s") + seconds)
 
     @property
     def remote_miss_fraction(self) -> float:
@@ -85,6 +122,8 @@ class CacheStats:
         self.hits = self.misses = self.misses_host = self.misses_remote = 0
         self.evictions = self.bytes_h2d = self.bytes_remote = 0
         self.fetch_host = self.fetch_remote = self.batches = 0
+        self.prefetch_s = self.scatter_s = 0.0
+        self.forward_s = self.overlap_s = 0.0
 
     def as_dict(self) -> Dict[str, float]:
         return {
@@ -100,6 +139,11 @@ class CacheStats:
             "batches": self.batches,
             "hit_rate": self.hit_rate,
             "remote_miss_fraction": self.remote_miss_fraction,
+            "prefetch_s": self.prefetch_s,
+            "scatter_s": self.scatter_s,
+            "forward_s": self.forward_s,
+            "overlap_s": self.overlap_s,
+            "overlap_fraction": self.overlap_fraction,
         }
 
     def __str__(self) -> str:
@@ -107,4 +151,8 @@ class CacheStats:
                 f"[host={self.misses_host} remote={self.misses_remote}], "
                 f"hit_rate={self.hit_rate:.4f}, evictions={self.evictions}, "
                 f"bytes_h2d={self.bytes_h2d}, "
-                f"bytes_remote={self.bytes_remote}, batches={self.batches})")
+                f"bytes_remote={self.bytes_remote}, batches={self.batches}, "
+                f"prefetch_s={self.prefetch_s:.4f}, "
+                f"scatter_s={self.scatter_s:.4f}, "
+                f"forward_s={self.forward_s:.4f}, "
+                f"overlap={self.overlap_fraction:.2f})")

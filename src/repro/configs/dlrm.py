@@ -44,6 +44,12 @@ class DLRMConfig:
     cold_tier: str = "host"              # host | remote
     remote_hosts: int = 0                # 0 = every local device backs a host
     remote_backend: str = "bulk"         # bulk | onesided
+    # pipelined serving (repro/pipeline/): number of slot-pool buffers in
+    # the double-buffered ring.  1 = serialized DLRMEngine (cold-fetch ->
+    # scatter -> forward per flush); >= 2 selects PipelinedDLRMEngine via
+    # make_dlrm_engine — batch k+1's prefetch targets the shadow buffer
+    # while batch k's forward reads the live one (requires cache_rows > 0)
+    pipeline_depth: int = 1
     # offline ids_freq_mapping seeding the LFU counters + pre-admitting the
     # top rows so the engine skips the cold-start miss burst (data, not
     # architecture: excluded from config equality/hash)
@@ -57,6 +63,9 @@ class DLRMConfig:
                 f"dot interaction needs bottom_mlp[-1] "
                 f"({self.bottom_mlp[-1]}) == embedding_dim "
                 f"({self.embedding_dim})")
+        if self.pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {self.pipeline_depth}")
 
     def embedding_config(self) -> EmbeddingBagConfig:
         return EmbeddingBagConfig(

@@ -295,6 +295,57 @@ def tiered_embedding_bag_time(
         w, hw, hit_rate=hit_rate, hosts=hosts, onesided=onesided).values())
 
 
+def overlapped_phase_times(
+    w: EmbeddingWorkload, hw: Hardware, *, hit_rate: float, hosts: int = 1,
+    onesided: bool = False, depth: int = 2,
+) -> Dict[str, float]:
+    """Steady-state per-batch phases of the PIPELINED tiered path
+    (repro/pipeline/): depth >= 2 double-buffers the slot pool so batch
+    k+1's prefetch (host-link h2d + remote ``fetch_rows``) runs under
+    batch k's forward gather.
+
+    Per-phase costs are :func:`tiered_phase_times` unchanged; the extra
+    ``overlap`` entry is the NEGATIVE span hidden under the forward —
+    ``min(prefetch, forward)``, the canonical steady-state pipeline
+    reduction — so ``sum(values())`` is the per-batch wall-clock
+    ``max(prefetch, forward)`` instead of their sum.  At ``depth`` 1
+    nothing overlaps and the dict degenerates to ``tiered_phase_times``
+    (``overlap`` = 0): the serialized engine exactly.
+    """
+    out = dict(tiered_phase_times(
+        w, hw, hit_rate=hit_rate, hosts=hosts, onesided=onesided))
+    fetch = out["prefetch_h2d"] + out["fetch_remote"]
+    out["overlap"] = -min(fetch, out["gather"]) if depth >= 2 else 0.0
+    return out
+
+
+def overlapped_embedding_bag_time(
+    w: EmbeddingWorkload, hw: Hardware, *, hit_rate: float, hosts: int = 1,
+    onesided: bool = False, depth: int = 2,
+) -> float:
+    """Steady-state per-batch seconds of the pipelined tiered path:
+    ``max(prefetch, forward)`` at depth >= 2, the serialized sum at 1."""
+    return sum(overlapped_phase_times(
+        w, hw, hit_rate=hit_rate, hosts=hosts, onesided=onesided,
+        depth=depth).values())
+
+
+def pipelined_speedup_vs_distributed(
+    table_bytes: float, w: EmbeddingWorkload, hw: Hardware, *,
+    hit_rate: float, hosts: int, depth: int = 2,
+    fetch_onesided: bool = False, dist_onesided: bool = False,
+) -> float:
+    """Fig. 9 recovery with a cluster-wide cold tier AND the prefetch
+    pipeline: :func:`tiered_speedup_vs_distributed` where the serving
+    device additionally hides miss-fetch latency under the forward."""
+    n = devices_for_table(table_bytes, hw)
+    dist = embedding_bag_time(w, n, hw, onesided=dist_onesided)
+    piped = overlapped_embedding_bag_time(
+        w, hw, hit_rate=hit_rate, hosts=hosts, onesided=fetch_onesided,
+        depth=depth)
+    return dist / piped
+
+
 def cached_phase_times(
     w: EmbeddingWorkload, hw: Hardware, *, hit_rate: float
 ) -> Dict[str, float]:

@@ -1,0 +1,238 @@
+"""Stage scheduler: ``admit -> fetch -> scatter -> forward -> swap``.
+
+The software pipeline over a :class:`DoubleBufferedSlotPool`.  One
+micro-batch is in flight on the device at a time; while its forward
+runs, the NEXT batch moves through the host-side stages against the
+shadow buffer:
+
+  admit    shadow-manager metadata (``prepare_next``) — numpy, run on
+           the BACKGROUND prefetch thread: the shadow buffer's state is
+           untouched by the in-flight batch, so the whole admission
+           plans under the live forward;
+  fetch    the cold-tier row fetch on the same background thread (numpy
+           gathers and the ``fetch_rows`` collective both release the
+           GIL), started BEFORE the previous forward's scores are
+           materialized so the two genuinely overlap whichever way the
+           backend dispatches (async: the materialize blocks while the
+           thread fetches; sync: the dispatch itself computes under the
+           thread);
+  scatter  the flat donated-jit pool scatter into the shadow buffer,
+           dispatched from the SAME background thread: it touches only
+           the shadow pool (the in-flight forward reads the live one),
+           so its host-side staging cost hides under the forward too,
+           and no ``block_until_ready`` is ever needed between stages —
+           dispatch order alone guarantees the scatter lands before the
+           batch's own forward reads the pool;
+  forward  dispatch the batch's forward on the (about-to-be-live)
+           shadow pool; its scores are materialized one iteration
+           later, under the NEXT batch's prefetch stages;
+  swap     rotate the ring (``DoubleBufferedSlotPool.swap``) — the
+           prepared epoch is published.
+
+Overlap is OBSERVED, not assumed: every stage records a wall-clock
+:class:`StageSpan` into a :class:`PipelineTrace`; ``overlap_s`` is the
+measured intersection of prefetch-side spans (admit/fetch) with open
+forward spans, and is pushed into the shared ``CacheStats`` so the
+serialized and pipelined engines report comparable numbers.
+
+Head-of-line behavior: a micro-batch whose working set overflows the
+shadow buffer (``CacheCapacityError`` from admit — atomic, nothing to
+roll back) drains the in-flight forward and falls back to the caller's
+serialized split flush, then the pipeline resumes.  A failed background
+fetch already invalidated its slots (``fetch_next``); the error is
+re-raised after the in-flight batch's scores are safely materialized.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+from repro.cache.manager import CacheCapacityError
+from repro.pipeline.double_buffer import DoubleBufferedSlotPool
+
+STAGES = ("admit", "fetch", "scatter", "forward", "swap")
+
+
+@dataclasses.dataclass(frozen=True)
+class StageSpan:
+    """One stage's wall-clock span for one micro-batch."""
+
+    stage: str
+    batch: int
+    start: float
+    end: float
+
+    @property
+    def seconds(self) -> float:
+        return self.end - self.start
+
+
+class PipelineTrace:
+    """Recorded stage spans — the pipeline's observability surface."""
+
+    def __init__(self):
+        self.spans: List[StageSpan] = []
+
+    def record(self, stage: str, batch: int, start: float,
+               end: float) -> None:
+        if stage not in STAGES:
+            raise ValueError(f"unknown stage {stage!r}; one of {STAGES}")
+        self.spans.append(StageSpan(stage, batch, start, end))
+
+    def by_stage(self, stage: str) -> List[StageSpan]:
+        return [s for s in self.spans if s.stage == stage]
+
+    def total(self, stage: str) -> float:
+        return sum(s.seconds for s in self.by_stage(stage))
+
+    def overlap_s(self) -> float:
+        """Prefetch-side wall-clock (admit + fetch spans) that lies
+        inside a forward span — the measured hidden latency."""
+        fwd = [(s.start, s.end) for s in self.by_stage("forward")]
+        out = 0.0
+        for s in self.spans:
+            if s.stage not in ("admit", "fetch"):
+                continue
+            for f0, f1 in fwd:
+                out += max(0.0, min(s.end, f1) - max(s.start, f0))
+        return out
+
+    def overlap_fraction(self) -> float:
+        pre = self.total("admit") + self.total("fetch")
+        return min(1.0, self.overlap_s() / pre) if pre > 0 else 0.0
+
+    def clear(self) -> None:
+        self.spans = []
+
+
+class PipelineScheduler:
+    """Drives the stage pipeline over caller-supplied micro-batches.
+
+    The caller provides three callables so the scheduler stays
+    model-agnostic:
+
+      ``forward(payload, remapped, lengths, pool, staged=None)`` —
+        DISPATCH the batch's forward over the given device pool and
+        return the un-materialized device output (no
+        ``block_until_ready``); ``staged`` is whatever ``prestage``
+        returned for this batch (None when no prestage hook is set);
+      ``collect(payload, host_out)`` — turn materialized scores into
+        the caller's result dict;
+      ``fallback(payload)`` — serialized split flush for a batch whose
+        working set overflowed the shadow buffer;
+      ``prestage(payload, remapped, lengths)`` (optional) — build the
+        forward's device operands; runs on the BACKGROUND thread right
+        after the scatter so host->device staging also hides under the
+        in-flight forward.
+    """
+
+    def __init__(self, pool: DoubleBufferedSlotPool, *,
+                 forward: Callable[..., Any],
+                 collect: Callable[[Any, np.ndarray], Dict],
+                 fallback: Callable[[Any], Dict],
+                 prestage: Optional[Callable[..., Any]] = None,
+                 trace: Optional[PipelineTrace] = None):
+        self.pool = pool
+        self.forward, self.collect, self.fallback = forward, collect, fallback
+        self.prestage = prestage
+        self.trace = trace if trace is not None else PipelineTrace()
+        self._seq = 0                 # global micro-batch counter (spans)
+        self._overlap_reported = 0.0  # overlap already pushed into stats
+
+    def run(self, batches: Sequence[Tuple[Any, np.ndarray, np.ndarray]],
+            out: Optional[Dict] = None) -> Dict:
+        """Pipeline ``batches`` (payload, (T,B,L) indices, (T,B) lengths)
+        through the ring; returns the union of ``collect``ed results.
+
+        Results accumulate into ``out`` IN PLACE as each batch drains,
+        so a caller passing its own dict keeps every already-scored
+        result even when a later stage raises — the engine uses this to
+        requeue only the genuinely unscored requests."""
+        stats = self.pool.stats
+        if out is None:
+            out = {}
+        inflight = None     # (payload, device_out, dispatch_t0, batch_id)
+        for payload, indices, lengths in batches:
+            k = self._seq
+            self._seq += 1
+            # -- admit + fetch + scatter for batch k on a background
+            #    thread: every stage touches only the SHADOW buffer (the
+            #    in-flight forward reads the live one), so the whole
+            #    prefetch pipeline hides under batch k-1's forward...
+            box: Dict[str, Any] = {}
+
+            def _worker(box=box, payload=payload, indices=indices,
+                        lengths=lengths):
+                stamps = [time.perf_counter()]
+                try:
+                    plan = box["plan"] = self.pool.prepare_next(indices,
+                                                                lengths)
+                    stamps.append(time.perf_counter())
+                    rows = self.pool.fetch_next(plan)
+                    stamps.append(time.perf_counter())
+                    self.pool.commit_next(plan, rows)
+                    if self.prestage is not None:   # operand staging too
+                        box["staged"] = self.prestage(payload,
+                                                      plan.remapped, lengths)
+                except BaseException as e:  # noqa: BLE001 — rethrown below
+                    box["err"] = e
+                stamps.append(time.perf_counter())
+                box["stamps"] = stamps
+
+            # one short-lived thread per micro-batch: spawn cost is tens
+            # of microseconds against millisecond-scale batches, and a
+            # dead thread can never leak a half-finished stage into the
+            # next batch the way a reused worker could
+            th = threading.Thread(target=_worker, daemon=True)
+            th.start()
+            # -- ...while batch k-1's forward completes under it
+            if inflight is not None:
+                out.update(self._drain(inflight))
+                inflight = None
+            th.join()
+            stamps = box["stamps"]
+            for stage, (s0, s1) in zip(("admit", "fetch", "scatter"),
+                                       zip(stamps, stamps[1:])):
+                self.trace.record(stage, k, s0, s1)
+                stats.add_time("scatter" if stage == "scatter"
+                               else "prefetch", s1 - s0)
+            err = box.get("err")
+            if isinstance(err, CacheCapacityError):
+                # head-of-line fallback: the working set overflowed the
+                # shadow buffer (atomic — nothing admitted); score this
+                # batch through the serialized split path and resume
+                out.update(self.fallback(payload))
+                continue
+            if err is not None:    # residency already invalidated in-thread
+                raise err
+            # -- dispatch forward k on the shadow pool, then publish it
+            plan = box["plan"]
+            t4 = time.perf_counter()
+            dev = self.forward(payload, plan.remapped, lengths,
+                               self.pool.shadow.pool,
+                               staged=box.get("staged"))
+            t5 = time.perf_counter()
+            self.pool.swap()
+            self.trace.record("swap", k, t5, time.perf_counter())
+            inflight = (payload, dev, t4, k)
+        if inflight is not None:
+            out.update(self._drain(inflight))
+        # push the measured overlap delta into the shared stats record
+        total = self.trace.overlap_s()
+        stats.add_time("overlap", total - self._overlap_reported)
+        self._overlap_reported = total
+        return out
+
+    def _drain(self, inflight) -> Dict:
+        """Materialize the in-flight forward's scores (the only blocking
+        point of the pipeline) and record its span."""
+        payload, dev, t_dispatch, k = inflight
+        host = np.asarray(dev)
+        t_end = time.perf_counter()
+        self.trace.record("forward", k, t_dispatch, t_end)
+        self.pool.stats.add_time("forward", t_end - t_dispatch)
+        return self.collect(payload, host)

@@ -12,10 +12,17 @@ DLRM serving: ``DLRMEngine`` micro-batches CTR scoring requests into one
 fixed-shape jitted forward whose embedding pooling runs the fused
 table-batched (TBE) kernel — one ``pallas_call`` per batch for all 26
 Criteo-like tables instead of 26 launches (the paper's #tables axis).
+``PipelinedDLRMEngine`` (selected by ``DLRMConfig.pipeline_depth >= 2``
+via :func:`make_dlrm_engine`) runs the same scoring as a software
+pipeline over double-buffered slot pools (repro/pipeline/): batch k+1's
+cold fetch and admission scatter target the shadow buffer while batch
+k's forward reads the live one — bitwise-identical scores, overlapped
+latency.
 """
 from __future__ import annotations
 
 import dataclasses
+import time
 from typing import Any, Dict, List, Optional, Tuple
 
 import jax
@@ -230,10 +237,8 @@ class DLRMEngine:
                     f"cache_rows ({cfg.cache_rows}) must be >= pooling "
                     f"({cfg.pooling}) so a single request's working set "
                     f"always fits the slot pool")
-            from repro.core.embedding_bag import make_cache
-
-            self.cache = make_cache(params["tables"],
-                                    cfg.embedding_config())
+            self.cache = self._make_cache(params["tables"],
+                                          cfg.embedding_config())
             # the cold tier now lives host-side inside the cache; drop the
             # engine's device-resident tables so serving holds only the
             # slot pool in HBM — the whole point of the tiered cache
@@ -244,6 +249,13 @@ class DLRMEngine:
                 dlrm_mod.forward(p, dense, batch, cfg, ctx))
 
         self._fwd = jax.jit(fwd)
+
+    def _make_cache(self, tables, ebcfg):
+        """Tiered-store construction hook — the pipelined engine swaps in
+        its double-buffered ring here."""
+        from repro.core.embedding_bag import make_cache
+
+        return make_cache(tables, ebcfg)
 
     def submit(self, req: CTRRequest):
         T = self.cfg.num_sparse_features
@@ -287,6 +299,22 @@ class DLRMEngine:
                 f"request {req.rid}: indices must be in [0, {R})")
         self.queue.append(req)
 
+    def _pad_batch(self, todo: List[CTRRequest]
+                   ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
+        """Pad ``todo`` to the engine's fixed shapes: (B, F) dense,
+        (T, B, L) indices, (T, B) lengths — tail slots stay all-masked."""
+        B = self.batch_size
+        T, L = self.cfg.num_sparse_features, self.cfg.pooling
+        F = self.cfg.num_dense_features
+        dense = np.zeros((B, F), np.float32)
+        idx = np.zeros((T, B, L), np.int32)
+        lens = np.zeros((T, B), np.int32)
+        for i, req in enumerate(todo):
+            dense[i] = req.dense
+            idx[:, i, :] = req.indices
+            lens[:, i] = req.lengths
+        return dense, idx, lens
+
     def flush(self) -> Dict[int, float]:
         """Score up to ``batch_size`` queued requests; returns rid -> pCTR."""
         if not self.queue:
@@ -294,20 +322,11 @@ class DLRMEngine:
         # peek, don't pop: the cached path's prefetch can refuse the batch
         # (working set over the slot pool) and the requests must survive
         todo = self.queue[: self.batch_size]
-        B = self.batch_size
-        T, L = self.cfg.num_sparse_features, self.cfg.pooling
-        F = self.cfg.num_dense_features
         if self.cache is not None:
             from repro.cache import CacheCapacityError
 
         while True:
-            dense = np.zeros((B, F), np.float32)
-            idx = np.zeros((T, B, L), np.int32)
-            lens = np.zeros((T, B), np.int32)
-            for i, req in enumerate(todo):   # pad tail slots stay all-masked
-                dense[i] = req.dense
-                idx[:, i, :] = req.indices
-                lens[:, i] = req.lengths
+            dense, idx, lens = self._pad_batch(todo)
             params = self.params
             if self.cache is not None:
                 # prefetch-at-flush: pin this micro-batch's rows in the
@@ -327,7 +346,10 @@ class DLRMEngine:
             break
         batch = JaggedBatch(indices=jnp.asarray(idx),
                             lengths=jnp.asarray(lens))
+        t0 = time.perf_counter()
         p = np.asarray(self._fwd(params, jnp.asarray(dense), batch))
+        if self.cache is not None:   # same span the pipeline scheduler logs
+            self.cache.stats.add_time("forward", time.perf_counter() - t0)
         self.queue = self.queue[len(todo):]
         return {req.rid: float(p[i]) for i, req in enumerate(todo)}
 
@@ -337,7 +359,10 @@ class DLRMEngine:
         Miss traffic is split by source tier: ``bytes_h2d`` /
         ``misses_host`` for rows the serving host owns, ``bytes_remote``
         / ``misses_remote`` for rows fetched from peer hosts — see
-        repro/cache/stats.py for the counting semantics."""
+        repro/cache/stats.py for the counting semantics.  Per-stage
+        wall-clock spans (``prefetch_s`` / ``scatter_s`` / ``forward_s``
+        / ``overlap_s``) are recorded by BOTH engines, so serialized and
+        pipelined runs are directly comparable."""
         return None if self.cache is None else self.cache.stats
 
     def run_to_completion(self) -> Dict[int, float]:
@@ -345,3 +370,127 @@ class DLRMEngine:
         while self.queue:
             out.update(self.flush())
         return out
+
+
+class PipelinedDLRMEngine(DLRMEngine):
+    """DLRM scoring as a software pipeline over double-buffered pools.
+
+    ``run_to_completion`` carves the queue into micro-batches and drives
+    the ``admit -> fetch -> scatter -> forward -> swap`` scheduler
+    (repro/pipeline/): batch k+1's admission scatter and cold-tier
+    ``fetch_rows`` target the shadow buffer while batch k's fused-TBE
+    forward reads the live one.  Scores are BITWISE equal to the
+    serialized :class:`DLRMEngine` — only the latency structure changes.
+
+    ``flush`` stays the SERIALIZED path against the live buffer: it is
+    both the one-micro-batch API and the pipeline's head-of-line
+    fallback — a batch whose working set overflows the shadow buffer
+    falls back to the inherited split-on-``CacheCapacityError`` loop
+    instead of deadlocking the ring.
+
+    Observability: ``self.trace`` holds every stage's wall-clock
+    :class:`~repro.pipeline.StageSpan`; the shared ``cache_stats()``
+    record carries the same ``prefetch_s/scatter_s/forward_s`` spans the
+    serialized engine logs, plus the measured ``overlap_s``.
+    """
+
+    def __init__(self, params, cfg: DLRMConfig, batch_size: int,
+                 ctx: Optional[ParallelContext] = None):
+        if cfg.pipeline_depth < 2:
+            raise ValueError(
+                f"PipelinedDLRMEngine needs pipeline_depth >= 2 (got "
+                f"{cfg.pipeline_depth}); depth 1 is the serialized "
+                f"DLRMEngine — use make_dlrm_engine to pick by config")
+        if cfg.cache_rows <= 0:
+            raise ValueError(
+                "PipelinedDLRMEngine requires the tiered cache "
+                "(cfg.cache_rows > 0): with fully device-resident tables "
+                "there is no prefetch stage to overlap")
+        from repro.pipeline import PipelineScheduler, PipelineTrace
+
+        super().__init__(params, cfg, batch_size, ctx)
+        self.trace = PipelineTrace()
+        self.scheduler = PipelineScheduler(
+            self.cache, forward=self._pipeline_forward,
+            collect=self._pipeline_collect, fallback=self._pipeline_fallback,
+            prestage=self._pipeline_prestage, trace=self.trace)
+
+    def _make_cache(self, tables, ebcfg):
+        from repro.pipeline import DoubleBufferedSlotPool
+
+        return DoubleBufferedSlotPool(tables, ebcfg,
+                                      depth=self.cfg.pipeline_depth)
+
+    # -- scheduler hooks -----------------------------------------------------
+
+    def _pipeline_prestage(self, payload, remapped, lengths):
+        """Stage the forward's device operands (runs on the scheduler's
+        background thread, hidden under the in-flight forward)."""
+        _, dense = payload
+        return (jnp.asarray(dense),
+                JaggedBatch(indices=jnp.asarray(remapped),
+                            lengths=jnp.asarray(lengths)))
+
+    def _pipeline_forward(self, payload, remapped, lengths, pool, *,
+                          staged=None):
+        """DISPATCH one micro-batch's jitted forward over ``pool``."""
+        if staged is None:
+            staged = self._pipeline_prestage(payload, remapped, lengths)
+        dense, batch = staged
+        params = {**self.params, "tables": pool}
+        return self._fwd(params, dense, batch)
+
+    def _pipeline_collect(self, payload, host_scores) -> Dict[int, float]:
+        todo, _ = payload
+        return {req.rid: float(host_scores[i])
+                for i, req in enumerate(todo)}
+
+    def _pipeline_fallback(self, payload) -> Dict[int, float]:
+        """Serialized split flush for an overflowing micro-batch: requeue
+        just this batch and reuse the inherited CacheCapacityError split
+        loop against the LIVE buffer."""
+        todo, _ = payload
+        rest = self.queue
+        self.queue = list(todo)
+        try:
+            scores: Dict[int, float] = {}
+            while self.queue:
+                scores.update(DLRMEngine.flush(self))
+        finally:
+            self.queue = rest
+        return scores
+
+    # -- pipelined serving ---------------------------------------------------
+
+    def run_to_completion(self) -> Dict[int, float]:
+        """Score the whole queue through the stage pipeline.
+
+        The serialized engine's "requests survive a failed flush"
+        contract holds here too: if the pipeline dies mid-run (e.g. a
+        cold-tier fetch failure — its residency is already rolled
+        back), every submitted request goes back on the queue; the
+        raising call delivered no scores, so a retry re-scores them all
+        (deterministic — same results)."""
+        batches, submitted = [], []
+        while self.queue:
+            todo = self.queue[: self.batch_size]
+            self.queue = self.queue[len(todo):]
+            submitted.extend(todo)
+            dense, idx, lens = self._pad_batch(todo)
+            batches.append(((todo, dense), idx, lens))
+        out: Dict[int, float] = {}
+        try:
+            self.scheduler.run(batches, out)
+        except BaseException:
+            self.queue = submitted + self.queue
+            raise
+        return out
+
+
+def make_dlrm_engine(params, cfg: DLRMConfig, batch_size: int,
+                     ctx: Optional[ParallelContext] = None) -> DLRMEngine:
+    """Build the engine ``cfg.pipeline_depth`` selects: 1 = serialized
+    :class:`DLRMEngine`, >= 2 = :class:`PipelinedDLRMEngine` over a
+    ``pipeline_depth``-deep double-buffered slot-pool ring."""
+    cls = PipelinedDLRMEngine if cfg.pipeline_depth > 1 else DLRMEngine
+    return cls(params, cfg, batch_size, ctx)

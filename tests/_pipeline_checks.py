@@ -1,0 +1,145 @@
+"""Multi-rank pipelined-serving checks, run as a SUBPROCESS on a FORCED
+4-device CPU backend by tests/test_pipeline.py (XLA_FLAGS must be set
+before jax import; the rest of the suite keeps the real single device).
+
+Covers the pipelined engine over a CLUSTER-WIDE cold tier: the
+``PipelinedDLRMEngine`` (depth-2 double-buffered slot pools, shadow
+prefetch under the live forward) scoring against a ``RemoteStore``
+(tables row-split over 4 simulated hosts, misses fetched by the batched
+``fetch_rows`` collective) must stay BITWISE equal to the serialized
+depth-1 engine across multiple flushes with LRU eviction churn — and
+the capacity-overflow fallback must serialize, not deadlock, with the
+remote tier underneath.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses
+import sys
+
+import numpy as np
+import jax
+
+from repro.configs import dlrm as dlrm_cfg
+from repro.models import dlrm as dlrm_mod
+from repro.pipeline import STAGES, DoubleBufferedSlotPool
+from repro.serving.engine import (
+    CTRRequest, DLRMEngine, PipelinedDLRMEngine, make_dlrm_engine,
+)
+
+failures = []
+
+
+def check(name, fn):
+    try:
+        fn()
+        print(f"PASS {name}")
+    except Exception as e:  # noqa: BLE001
+        failures.append(name)
+        import traceback
+        traceback.print_exc()
+        print(f"FAIL {name}: {e}")
+
+
+def _requests(cfg, n, rng):
+    """Zipf traffic with a per-flush shifting id window so the LRU pools
+    churn (evictions in every buffer) while hot rows keep repeating."""
+    T, L, F = (cfg.num_sparse_features, cfg.pooling,
+               cfg.num_dense_features)
+    R = cfg.rows_per_table
+    reqs = []
+    for rid in range(n):
+        ranks = np.minimum(rng.zipf(1.2, size=(T, L)) - 1, R - 1)
+        # shift a third of the lookups into a sliding window: drags the
+        # working set across all 4 hosts' row shards over the run
+        window = (ranks + (rid // 3) * (R // 4)) % R
+        idx = np.where(rng.random((T, L)) < 0.33, window, ranks)
+        reqs.append(CTRRequest(
+            rid=rid, dense=rng.standard_normal(F).astype(np.float32),
+            indices=idx.astype(np.int32),
+            lengths=rng.integers(1, L + 1, T).astype(np.int32)))
+    return reqs
+
+
+def pipelined_remote_bitwise_vs_depth1():
+    """>= 3 flushes of churning zipf traffic over the remote cold tier:
+    pipelined scores == serialized scores, BITWISE."""
+    base = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference",
+                               cache_rows=16, cache_policy="lru",
+                               cold_tier="remote")
+    params = dlrm_mod.init_params(jax.random.key(0), base)
+    serial = make_dlrm_engine(params, base, batch_size=3)
+    piped = make_dlrm_engine(
+        params, dataclasses.replace(base, pipeline_depth=2), batch_size=3)
+    assert type(serial) is DLRMEngine
+    assert isinstance(piped, PipelinedDLRMEngine)
+    assert isinstance(piped.cache, DoubleBufferedSlotPool)
+    assert piped.params["tables"] is None   # HBM holds only the pools
+    rng = np.random.default_rng(1)
+    reqs = _requests(base, 24, rng)         # 8 flushes at batch_size 3
+    for r in reqs:
+        serial.submit(r)
+        piped.submit(r)
+    want = serial.run_to_completion()
+    got = piped.run_to_completion()
+    assert sorted(got) == sorted(want) == list(range(24))
+    exact = [rid for rid in want if got[rid] == want[rid]]
+    assert len(exact) == 24, f"bitwise mismatch on rids " \
+        f"{sorted(set(want) - set(exact))}"
+    s = piped.cache_stats()
+    assert s.evictions > 0, "no churn — the check lost its teeth"
+    assert s.misses_remote > 0 and s.bytes_remote > 0
+    assert s.prefetch_s > 0 and s.forward_s > 0
+    # the overlap is measured from real spans, every stage recorded
+    for st in STAGES:
+        assert piped.trace.by_stage(st), f"no {st} spans recorded"
+    assert s.overlap_s >= 0
+    assert abs(piped.trace.overlap_s() - s.overlap_s) < 1e-9
+    # serialized engine records the SAME span kinds, but nothing overlaps
+    ss = serial.cache_stats()
+    assert ss.prefetch_s > 0 and ss.forward_s > 0 and ss.overlap_s == 0.0
+
+
+def pipelined_fallback_remote_no_deadlock():
+    """A micro-batch whose union working set overflows the shadow buffer
+    must fall back to the serialized split flush — over the remote tier
+    too — and still score everything, equal to the depth-1 engine."""
+    base = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference",
+                               cold_tier="remote")
+    L = base.pooling
+    params = dlrm_mod.init_params(jax.random.key(2), base)
+    cfg1 = dataclasses.replace(base, cache_rows=L)
+    serial = make_dlrm_engine(params, cfg1, batch_size=2)
+    piped = make_dlrm_engine(
+        params, dataclasses.replace(cfg1, pipeline_depth=2), batch_size=2)
+    T, F = base.num_sparse_features, base.num_dense_features
+    rng = np.random.default_rng(3)
+    # disjoint full-length working sets: any 2-request union overflows
+    reqs = [CTRRequest(
+        rid=rid, dense=rng.standard_normal(F).astype(np.float32),
+        indices=(np.arange(T * L, dtype=np.int32).reshape(T, L)
+                 + rid * L) % base.rows_per_table,
+        lengths=np.full(T, L, np.int32)) for rid in range(4)]
+    for r in reqs:
+        serial.submit(r)
+        piped.submit(r)
+    want = serial.run_to_completion()
+    got = piped.run_to_completion()
+    assert sorted(got) == sorted(want) == [0, 1, 2, 3]
+    assert all(got[rid] == want[rid] for rid in want), (got, want)
+    assert not piped.queue                  # nothing stranded
+
+
+def run_all():
+    check("pipelined_remote_bitwise_vs_depth1",
+          pipelined_remote_bitwise_vs_depth1)
+    check("pipelined_fallback_remote_no_deadlock",
+          pipelined_fallback_remote_no_deadlock)
+
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("ALL PIPELINE CHECKS PASS")
+
+
+if __name__ == "__main__":
+    run_all()
