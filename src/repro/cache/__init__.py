@@ -54,6 +54,17 @@ offline ``ids_freq_mapping`` so serving skips the cold-start miss burst.
 ``core/sharding_plan.plan`` prices slot pools as a fourth "cached"
 placement strategy against the modeled tiered phase times
 (``core/perf_model.tiered_phase_times``).
+
+PR 5 closed the planner -> engine round trip: ``SlotPoolManager`` takes
+a PER-TABLE slot vector ``S_t`` (a plan's ``Placement.cache_rows``, by
+POSITION — ``Placement.index``), kept in one padded ``(T, max(S_t))``
+slot space so the fused TBE kernel and flat-scatter addressing are
+unchanged; slots beyond a table's own ``S_t`` are ``DEAD_SLOT`` and
+never allocated, and capacity / eviction / warmup run per table.
+``CacheStats`` splits hits/misses/evictions per table (``hit_rate_t``),
+so a served plan's measured hit rates are directly comparable to its
+priced ``est_hit_rate`` — asserted end-to-end by
+benchmarks/plan_roundtrip_sweep.py.
 """
 from repro.cache.cached_bag import CachedEmbeddingBag, make_cold_store
 from repro.cache.manager import (

@@ -70,7 +70,7 @@ def make_cold_store(tables, cfg: EmbeddingBagConfig) -> TableStore:
 
 class CachedEmbeddingBag:
     def __init__(self, tables, cfg: EmbeddingBagConfig, *,
-                 cache_rows: Optional[int] = None,
+                 cache_rows=None,
                  policy: Optional[str] = None,
                  cold_store: Optional[TableStore] = None,
                  stats: Optional[CacheStats] = None):
@@ -86,16 +86,26 @@ class CachedEmbeddingBag:
             else make_cold_store(tables, cfg)
         T, R, D = tables.shape
         self.dtype = tables.dtype
-        S = int(cache_rows if cache_rows is not None else cfg.cache_rows)
-        if S <= 0:
+        # slot sizing: an explicit ``cache_rows`` argument (scalar or
+        # per-table vector) wins, then the config's per-table vector
+        # (the planner -> engine round trip), then the uniform scalar.
+        if cache_rows is not None:
+            S = cache_rows
+        elif cfg.cache_rows_per_table is not None:
+            S = np.asarray(cfg.cache_rows_per_table, np.int64)
+        else:
+            S = int(cfg.cache_rows)
+        if np.min(S) <= 0:
             raise ValueError(
-                "cache_rows must be > 0 to build a CachedEmbeddingBag "
-                "(set EmbeddingBagConfig.cache_rows or pass cache_rows=)")
+                "cache_rows must be > 0 (for every table) to build a "
+                "CachedEmbeddingBag (set EmbeddingBagConfig.cache_rows / "
+                "cache_rows_per_table or pass cache_rows=)")
         self.mgr = SlotPoolManager(
             T, R, S,
             policy if policy is not None else cfg.cache_policy,
             rows_per_host=self.cold.rows_per_host, home=self.cold.home)
-        self.hot = SlotPool(T, self.mgr.S, D, self.dtype)
+        self.hot = SlotPool(T, self.mgr.S, D, self.dtype,
+                            slots_per_table=self.mgr.slots_per_table)
         # stats may be SHARED: the double-buffered pipeline pool passes
         # one CacheStats so every buffer's traffic lands in one record
         self.stats = stats if stats is not None else CacheStats()
@@ -202,7 +212,9 @@ class CachedEmbeddingBag:
 
     @property
     def cache_ratio(self) -> float:
-        return self.mgr.S / self.mgr.R
+        """Mean resident fraction: total live slots over total rows."""
+        return float(self.mgr.slots_per_table.sum()) / (self.mgr.T
+                                                        * self.mgr.R)
 
     @property
     def pool_bytes(self) -> int:

@@ -12,12 +12,22 @@ T tables):
 
   * ``slot_of_id (T, R) int32`` — the indirection table: row id -> pool
     slot, -1 when the row is host-only.  Device lookups remap through it.
-  * ``id_of_slot (T, S) int64`` — reverse map, -1 for free slots.
+  * ``id_of_slot (T, S) int64`` — reverse map, -1 for free slots, -2
+    (``DEAD_SLOT``) for padding slots beyond a table's own capacity.
   * ``freq (T, R) int64``       — per-row batch-frequency counters,
     accumulated over every prefetch (they PERSIST across eviction, so a
     re-admitted hot row keeps its rank — CacheEmbedding's
     ``ids_freq_mapping`` made dynamic).
   * ``last_used (T, S) int64``  — per-slot touch tick for LRU.
+
+Heterogeneous capacity (the planner -> engine round trip): ``slots``
+may be a PER-TABLE vector ``S_t`` — e.g. each ``Placement.cache_rows``
+of a :class:`repro.core.sharding_plan.ShardingPlan` — instead of one
+global size.  The slot space stays ONE padded ``(T, max(S_t))``
+rectangle so the fused TBE kernel and the flat ``t * S + slot`` scatter
+addressing are unchanged; slots ``>= S_t`` of table ``t`` are marked
+``DEAD_SLOT`` at construction and are simply never allocated.  Capacity
+checks, eviction and warmup admission all run against ``S_t``.
 
 Eviction (policy "lfu"): victim = resident slot whose row has the
 smallest frequency counter.  Policy "lru": victim = slot with the oldest
@@ -32,6 +42,10 @@ import dataclasses
 import numpy as np
 
 POLICIES = ("lfu", "lru")
+
+# id_of_slot sentinel for padding slots beyond a table's own capacity
+# S_t (heterogeneous pools): never free, never occupied, never a victim.
+DEAD_SLOT = -2
 
 
 class CacheCapacityError(RuntimeError):
@@ -64,6 +78,11 @@ class PrefetchPlan:
     misses_host: int = 0      # misses whose row the serving host owns
     misses_remote: int = 0    # misses served by a peer host's shard
     evictions: int = 0
+    # per-table splits of the totals above — (T,) int64, None for plans
+    # that carry no lookups (warmup admission)
+    hits_t: np.ndarray = None
+    misses_t: np.ndarray = None
+    evictions_t: np.ndarray = None
 
     @property
     def fetch_remote_rows(self) -> int:
@@ -92,19 +111,35 @@ class PrefetchPlan:
             bytes_h2d=self.fetch_host_rows * row_bytes,
             bytes_remote=self.fetch_remote_rows * row_bytes,
             fetch_host=self.fetch_host_rows,
-            fetch_remote=self.fetch_remote_rows)
+            fetch_remote=self.fetch_remote_rows,
+            hits_t=self.hits_t, misses_t=self.misses_t,
+            evictions_t=self.evictions_t)
 
 
 class SlotPoolManager:
-    def __init__(self, num_tables: int, rows: int, slots: int,
+    def __init__(self, num_tables: int, rows: int, slots,
                  policy: str = "lfu", *, rows_per_host: int = None,
                  home: int = 0):
         if policy not in POLICIES:
             raise ValueError(
                 f"unknown cache_policy {policy!r}; pick one of {POLICIES}")
-        if slots <= 0:
-            raise ValueError(f"slot pool must be positive, got {slots}")
-        self.T, self.R, self.S = num_tables, rows, min(slots, rows)
+        # ``slots``: one global size, or a per-table vector S_t (the
+        # planner -> engine round trip).  The slot space is padded to
+        # max(S_t); a table's slots beyond its own S_t are DEAD.
+        slots_t = np.asarray(slots, np.int64)
+        if slots_t.ndim == 0:
+            slots_t = np.full(num_tables, int(slots_t), np.int64)
+        if slots_t.shape != (num_tables,):
+            raise ValueError(
+                f"per-table slots must be a scalar or a ({num_tables},) "
+                f"vector, got shape {slots_t.shape}")
+        if (slots_t <= 0).any():
+            raise ValueError(
+                f"slot pool must be positive for every table, got "
+                f"{slots_t.tolist()}")
+        self.slots_per_table = np.minimum(slots_t, rows)
+        self.T, self.R = num_tables, rows
+        self.S = int(self.slots_per_table.max(initial=0))
         self.policy = policy
         # cold-tier ownership layout: row r lives on host r // rows_per_host;
         # rows the serving host (``home``) owns are HOST-tier traffic,
@@ -115,6 +150,9 @@ class SlotPoolManager:
         self.id_of_slot = np.full((self.T, self.S), -1, np.int64)
         self.freq = np.zeros((self.T, self.R), np.int64)
         self.last_used = np.full((self.T, self.S), -1, np.int64)
+        # padding slots beyond each table's own capacity never allocate
+        for t in range(self.T):
+            self.id_of_slot[t, self.slots_per_table[t]:] = DEAD_SLOT
         self.tick = 0
         # pool epoch: advanced by the pipeline's buffer swap.  prepare()
         # plans for the CURRENT epoch (serialized serving: admit-then-
@@ -138,11 +176,14 @@ class SlotPoolManager:
           indices: (T, B, L) table-local row ids (padding slots arbitrary).
           valid:   (T, B, L) bool — True where the lookup is within-length.
         """
-        T, S = self.T, self.S
+        T = self.T
         indices = np.asarray(indices)
         valid = np.asarray(valid, bool)
         plan_t, plan_r, plan_s = [], [], []
-        hits = misses = misses_remote = evictions = 0
+        misses_remote = 0
+        hits_t = np.zeros(T, np.int64)
+        misses_t = np.zeros(T, np.int64)
+        evictions_t = np.zeros(T, np.int64)
         remapped = np.zeros(indices.shape, np.int32)
 
         # Validate EVERY table before mutating ANY state: prepare must be
@@ -156,11 +197,13 @@ class SlotPoolManager:
                 raise IndexError(
                     f"table {t}: lookup ids outside [0, {self.R})")
             uniq, counts = np.unique(ids_t, return_counts=True)
-            if uniq.size > S:
+            if uniq.size > self.slots_per_table[t]:
                 raise CacheCapacityError(
                     f"table {t}: batch working set ({uniq.size} unique rows)"
-                    f" exceeds the slot pool ({S} slots) — raise"
-                    f" EmbeddingBagConfig.cache_rows or shrink the batch")
+                    f" exceeds the slot pool ({self.slots_per_table[t]} "
+                    f"slots) — raise EmbeddingBagConfig.cache_rows (or this"
+                    f" table's cache_rows_per_table entry) or shrink the"
+                    f" batch")
             per_table.append((uniq, counts))
 
         for t in range(T):
@@ -169,21 +212,23 @@ class SlotPoolManager:
 
             slots_u = self.slot_of_id[t, uniq]
             resident = slots_u >= 0
-            hits += int(counts[resident].sum())
-            misses += int(counts[~resident].sum())
+            hits_t[t] = int(counts[resident].sum())
+            misses_t[t] = int(counts[~resident].sum())
             miss_ids = uniq[~resident]
             misses_remote += int(
                 counts[~resident][self._owner(miss_ids) != self.home].sum())
 
             if miss_ids.size:
-                free = np.flatnonzero(self.id_of_slot[t] < 0)
+                # free slots only: DEAD_SLOT padding beyond this table's
+                # own S_t is never allocated
+                free = np.flatnonzero(self.id_of_slot[t] == -1)
                 need = miss_ids.size - free.size
                 if need > 0:
                     victims = self._pick_victims(t, need, slots_u[resident])
                     evicted = self.id_of_slot[t, victims]
                     self.slot_of_id[t, evicted] = -1
                     self.id_of_slot[t, victims] = -1
-                    evictions += need
+                    evictions_t[t] += need
                     free = np.concatenate([free, victims])
                 target = free[: miss_ids.size]
                 self.slot_of_id[t, miss_ids] = target
@@ -202,6 +247,7 @@ class SlotPoolManager:
         cat = lambda xs, dt: (np.concatenate(xs) if xs
                               else np.zeros((0,), dt))
         fetch_rows = cat(plan_r, np.int64)
+        misses = int(misses_t.sum())
         return PrefetchPlan(
             remapped=remapped,
             fetch_tables=cat(plan_t, np.int32),
@@ -210,10 +256,11 @@ class SlotPoolManager:
             fetch_owner=self._owner(fetch_rows),
             home=self.home,
             epoch=self.epoch,
-            hits=hits, misses=misses,
+            hits=int(hits_t.sum()), misses=misses,
             misses_host=misses - misses_remote,
             misses_remote=misses_remote,
-            evictions=evictions,
+            evictions=int(evictions_t.sum()),
+            hits_t=hits_t, misses_t=misses_t, evictions_t=evictions_t,
         )
 
     # -- pipelined serving: epoch-aware admission (repro/pipeline/) ----------
@@ -265,7 +312,7 @@ class SlotPoolManager:
         self.freq += freqs.astype(np.int64)
 
     def warmup_admit(self) -> PrefetchPlan:
-        """Admit each table's top-S rows by (seeded) frequency.
+        """Admit each table's top-``S_t`` rows by (seeded) frequency.
 
         Returns the fetch plan for the rows newly admitted — executed by
         the bag like a batch prefetch, but with NO lookups: the first
@@ -275,12 +322,12 @@ class SlotPoolManager:
         plan_t, plan_r, plan_s = [], [], []
         for t in range(self.T):
             order = np.argsort(-self.freq[t], kind="stable")
-            top = order[: self.S]
+            top = order[: self.slots_per_table[t]]
             top = top[self.freq[t, top] > 0]
             fresh = top[self.slot_of_id[t, top] < 0]
             if not fresh.size:
                 continue
-            free = np.flatnonzero(self.id_of_slot[t] < 0)[: fresh.size]
+            free = np.flatnonzero(self.id_of_slot[t] == -1)[: fresh.size]
             fresh = fresh[: free.size]          # never evict during warmup
             self.slot_of_id[t, fresh] = free
             self.id_of_slot[t, free] = fresh
@@ -288,6 +335,12 @@ class SlotPoolManager:
             plan_t.append(np.full(fresh.size, t, np.int32))
             plan_r.append(fresh.astype(np.int64))
             plan_s.append(free.astype(np.int64))
+        # Pre-advance the tick: warmup residents must be stamped STRICTLY
+        # earlier than the first real batch's LRU touches.  Stamping both
+        # at the same tick made them tie, so eviction could not prefer a
+        # warmup-admitted-but-never-used row over one the serving traffic
+        # actually touched (argpartition then picked by slot order).
+        self.tick += 1
         cat = lambda xs, dt: (np.concatenate(xs) if xs
                               else np.zeros((0,), dt))
         fetch_rows = cat(plan_r, np.int64)

@@ -25,7 +25,14 @@ Counting semantics (matched by the numpy simulation in tests/test_cache.py):
     disjoint so traffic attributes to one source);
   * ``fetch_host`` / ``fetch_remote`` count the unique rows each cold
     tier actually moved (warmup admission counts here too, with zero
-    hits/misses — it happens before any lookup).
+    hits/misses — it happens before any lookup);
+  * ``hits_t`` / ``misses_t`` / ``evictions_t`` split the totals PER
+    TABLE — ``(T,)`` int64, lazily allocated on the first per-table
+    update.  Embedding tables are wildly heterogeneous (the paper's §5
+    sweeps), and the planner prices a distinct ``cache_rows``/
+    ``est_hit_rate`` per table, so the measured hit rate must be
+    checkable at the same granularity (``hit_rate_t``) — that is the
+    planner -> engine round trip's feedback signal.
 
 Stage timers (PR 4, the pipelined serving subsystem): the SAME spans are
 recorded whichever engine serves, so the serialized and pipelined paths
@@ -46,7 +53,9 @@ are directly comparable from ``DLRMEngine.cache_stats()``:
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict
+from typing import Dict, Optional
+
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -63,6 +72,10 @@ class CacheStats:
     fetch_host: int = 0
     fetch_remote: int = 0
     batches: int = 0
+    # per-table splits — (T,) int64, None until the first per-table update
+    hits_t: Optional[np.ndarray] = None
+    misses_t: Optional[np.ndarray] = None
+    evictions_t: Optional[np.ndarray] = None
     # per-stage wall-clock spans (seconds) — see module docstring
     prefetch_s: float = 0.0
     scatter_s: float = 0.0
@@ -99,10 +112,40 @@ class CacheStats:
         """Share of misses the REMOTE tier served (0 with a local cold tier)."""
         return self.misses_remote / self.misses if self.misses else 0.0
 
+    @property
+    def lookups_t(self) -> Optional[np.ndarray]:
+        """(T,) per-table lookup counts (None before any per-table update)."""
+        if self.hits_t is None:
+            return None
+        return self.hits_t + self.misses_t
+
+    @property
+    def hit_rate_t(self) -> Optional[np.ndarray]:
+        """(T,) per-table hit rates — the measured side of the planner
+        round trip, compared against each ``Placement.est_hit_rate``
+        (0.0 for a table that saw no lookups)."""
+        n = self.lookups_t
+        if n is None:
+            return None
+        return np.where(n > 0, self.hits_t / np.maximum(n, 1), 0.0)
+
+    def _acc_t(self, field: str, values) -> None:
+        values = np.asarray(values, np.int64)
+        cur = getattr(self, field)
+        if cur is None:
+            setattr(self, field, values.copy())
+        elif cur.shape != values.shape:
+            raise ValueError(
+                f"per-table {field} shape {values.shape} does not match "
+                f"the accumulated shape {cur.shape}")
+        else:
+            cur += values
+
     def update(self, *, hits: int, misses: int, evictions: int,
                bytes_h2d: int, misses_host: int = None,
                misses_remote: int = 0, bytes_remote: int = 0,
                fetch_host: int = 0, fetch_remote: int = 0,
+               hits_t=None, misses_t=None, evictions_t=None,
                count_batch: bool = True) -> None:
         self.hits += int(hits)
         self.misses += int(misses)
@@ -115,6 +158,10 @@ class CacheStats:
         self.bytes_remote += int(bytes_remote)
         self.fetch_host += int(fetch_host)
         self.fetch_remote += int(fetch_remote)
+        for field, values in (("hits_t", hits_t), ("misses_t", misses_t),
+                              ("evictions_t", evictions_t)):
+            if values is not None:
+                self._acc_t(field, values)
         if count_batch:
             self.batches += 1
 
@@ -122,6 +169,7 @@ class CacheStats:
         self.hits = self.misses = self.misses_host = self.misses_remote = 0
         self.evictions = self.bytes_h2d = self.bytes_remote = 0
         self.fetch_host = self.fetch_remote = self.batches = 0
+        self.hits_t = self.misses_t = self.evictions_t = None
         self.prefetch_s = self.scatter_s = 0.0
         self.forward_s = self.overlap_s = 0.0
 
@@ -139,6 +187,15 @@ class CacheStats:
             "batches": self.batches,
             "hit_rate": self.hit_rate,
             "remote_miss_fraction": self.remote_miss_fraction,
+            "hits_t": (None if self.hits_t is None
+                       else self.hits_t.tolist()),
+            "misses_t": (None if self.misses_t is None
+                         else self.misses_t.tolist()),
+            "evictions_t": (None if self.evictions_t is None
+                            else self.evictions_t.tolist()),
+            "hit_rate_t": (None if self.hits_t is None
+                           else [round(float(r), 4)
+                                 for r in self.hit_rate_t]),
             "prefetch_s": self.prefetch_s,
             "scatter_s": self.scatter_s,
             "forward_s": self.forward_s,

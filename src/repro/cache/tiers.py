@@ -101,12 +101,27 @@ class SlotPool(TableStore):
     Never reallocated — ``scatter`` replaces the array functionally (the
     donated jit updates it in place on accelerators), so the jitted
     consumer compiles exactly once.
+
+    ``slots_per_table`` records a heterogeneous plan's per-table live
+    widths ``S_t`` (the manager never scatters into a table's padding
+    slots ``>= S_t``): the pool stays one padded rectangle so the fused
+    TBE kernel and the flat ``t * S + slot`` addressing are unchanged,
+    while ``live_nbytes`` reports the bytes the plan actually bought.
     """
 
     tier = "hbm"
 
-    def __init__(self, num_tables: int, slots: int, dim: int, dtype):
+    def __init__(self, num_tables: int, slots: int, dim: int, dtype,
+                 *, slots_per_table=None):
         self.array = jnp.zeros((num_tables, slots, dim), dtype)
+        if slots_per_table is None:
+            slots_per_table = np.full(num_tables, slots, np.int64)
+        self.slots_per_table = np.asarray(slots_per_table, np.int64)
+        if self.slots_per_table.shape != (num_tables,) or \
+                self.slots_per_table.max(initial=0) > slots:
+            raise ValueError(
+                f"slots_per_table must be ({num_tables},) with entries "
+                f"<= {slots}, got {slots_per_table}")
 
     @property
     def slots(self) -> int:
@@ -119,6 +134,14 @@ class SlotPool(TableStore):
     @property
     def nbytes(self) -> int:
         return int(self.array.size) * self.array.dtype.itemsize
+
+    @property
+    def live_nbytes(self) -> int:
+        """Bytes of ADDRESSABLE slots (sum of per-table live widths) —
+        what a heterogeneous plan charged to the HBM budget; ``nbytes``
+        additionally counts the rectangle's padding."""
+        return int(self.slots_per_table.sum()) * self.array.shape[-1] \
+            * self.array.dtype.itemsize
 
     def fetch(self, t_ids, slot_ids) -> np.ndarray:
         """Read resident payloads back (test/debug hook, device->host)."""

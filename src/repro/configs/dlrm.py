@@ -48,8 +48,20 @@ class DLRMConfig:
     # the double-buffered ring.  1 = serialized DLRMEngine (cold-fetch ->
     # scatter -> forward per flush); >= 2 selects PipelinedDLRMEngine via
     # make_dlrm_engine — batch k+1's prefetch targets the shadow buffer
-    # while batch k's forward reads the live one (requires cache_rows > 0)
+    # while batch k's forward reads the live one (requires the tiered
+    # cache: cache_rows > 0 or a sharding_plan)
     pipeline_depth: int = 1
+    # planner -> engine round trip: a core.sharding_plan.ShardingPlan
+    # whose per-table "cached" Placement.cache_rows size HETEROGENEOUS
+    # slot pools (one padded (T, max S_t, D) device pool; capacity and
+    # eviction per table).  Placements map to tables by POSITION
+    # (Placement.index), never by name — benchmark sweeps duplicate
+    # names freely.  Tables the planner did not price as "cached" fall
+    # back to the uniform cache_rows scalar (or the pooling floor when
+    # cache_rows == 0).  Data, not architecture: excluded from config
+    # equality/hash like warmup_freqs.
+    sharding_plan: object = dataclasses.field(
+        default=None, compare=False, repr=False)
     # offline ids_freq_mapping seeding the LFU counters + pre-admitting the
     # top rows so the engine skips the cold-start miss burst (data, not
     # architecture: excluded from config equality/hash)
@@ -67,6 +79,15 @@ class DLRMConfig:
             raise ValueError(
                 f"pipeline_depth must be >= 1, got {self.pipeline_depth}")
 
+    def cache_rows_vector(self):
+        """Per-table slot counts the tiered store should use, or None
+        when no plan is attached (uniform ``cache_rows`` path)."""
+        if self.sharding_plan is None:
+            return None
+        fallback = self.cache_rows if self.cache_rows > 0 else self.pooling
+        return tuple(self.sharding_plan.cache_rows_vector(
+            self.num_sparse_features, default=fallback))
+
     def embedding_config(self) -> EmbeddingBagConfig:
         return EmbeddingBagConfig(
             num_tables=self.num_sparse_features,
@@ -79,6 +100,7 @@ class DLRMConfig:
             kernel_mode=self.kernel_mode,
             fused=self.fused,
             cache_rows=self.cache_rows,
+            cache_rows_per_table=self.cache_rows_vector(),
             cache_policy=self.cache_policy,
             cold_tier=self.cold_tier,
             remote_hosts=self.remote_hosts,

@@ -87,6 +87,13 @@ class EmbeddingBagConfig:
     # — see pooled_lookup_cached / repro.cache.
     cache_rows: int = 0
     cache_policy: str = "lfu"        # lfu | lru
+    # cache_rows_per_table: heterogeneous slot vector S_t — one entry per
+    # table, typically a ShardingPlan's per-table Placement.cache_rows
+    # (DLRMConfig.sharding_plan threads it here).  Overrides the uniform
+    # scalar above when set; the pool stays ONE padded (T, max(S_t), D)
+    # rectangle so the fused TBE kernel is unchanged, but capacity checks
+    # and LFU/LRU eviction run against each table's own S_t.
+    cache_rows_per_table: Optional[Tuple[int, ...]] = None
     # cold_tier: where non-resident rows live (repro/cache/tiers.py).
     #   "host"   — the serving host's memory (numpy), misses cross the
     #              host<->device link;

@@ -143,10 +143,26 @@ def random_jagged_batch(
 
     ``zipf_a`` switches to a Zipfian row-popularity distribution — real CTR
     traffic is heavily skewed (hot rows), which matters for cache behaviour.
+    Two regimes, matching ``perf_model.zipf_hit_rate``'s traffic model:
+
+      * ``zipf_a > 1`` — numpy's infinite-support zipf sampler, ranks
+        clipped to ``num_rows`` (the rank tail collapses onto the last
+        row);
+      * ``0 < zipf_a <= 1`` — the infinite-support zeta diverges (and
+        ``rng.zipf`` refuses it), so ranks are drawn from the TRUNCATED
+        zeta over exactly ``num_rows`` ids via inverse-CDF sampling:
+        ``p_k ∝ k^-zipf_a``, k = 1..num_rows.
     """
     T, B, L = num_tables, batch_size, pooling
     if zipf_a is None:
         idx = rng.integers(0, num_rows, size=(T, B, L), dtype=np.int64)
+    elif zipf_a <= 0:
+        raise ValueError(f"zipf_a must be positive, got {zipf_a}")
+    elif zipf_a <= 1.0:
+        pmf = np.arange(1, num_rows + 1, dtype=np.float64) ** -zipf_a
+        cdf = np.cumsum(pmf)
+        cdf /= cdf[-1]
+        idx = np.searchsorted(cdf, rng.random((T, B, L)))
     else:
         ranks = rng.zipf(zipf_a, size=(T, B, L))
         idx = np.minimum(ranks - 1, num_rows - 1)

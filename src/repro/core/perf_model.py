@@ -25,6 +25,8 @@ import functools
 import math
 from typing import Dict
 
+import numpy as np
+
 
 @dataclasses.dataclass(frozen=True)
 class Transport:
@@ -202,7 +204,13 @@ def local_vs_distributed_speedup(
 
 @functools.lru_cache(maxsize=None)
 def _gen_harmonic(n: float, a: float) -> float:
-    """H(n, a) = sum_{k=1..n} k^-a for a > 1 (exact head + integral tail)."""
+    """H(n, a) = sum_{k=1..n} k^-a (exact head + integral tail).
+
+    Valid for any ``a >= 0``: the Euler–Maclaurin tail uses the power
+    integral for ``a != 1`` and the log integral at exactly ``a == 1``
+    (the plain harmonic number) — the truncated-zeta mass the a <= 1
+    traffic model needs.
+    """
     n = int(n)
     if n <= 0:
         return 0.0
@@ -210,8 +218,11 @@ def _gen_harmonic(n: float, a: float) -> float:
     s = sum(k ** -a for k in range(1, head + 1))
     if n > head:
         # Euler–Maclaurin tail: integral + half-correction at both ends
-        s += (head ** (1 - a) - n ** (1 - a)) / (a - 1) \
-            - head ** -a / 2 + n ** -a / 2
+        if a == 1.0:
+            s += math.log(n / head) - 1 / (2 * head) + 1 / (2 * n)
+        else:
+            s += (head ** (1 - a) - n ** (1 - a)) / (a - 1) \
+                - head ** -a / 2 + n ** -a / 2
     return s
 
 
@@ -219,30 +230,107 @@ def zipf_hit_rate(a: float, rows: int, cache_rows: int) -> float:
     """Steady-state per-lookup hit rate of a ``cache_rows``-row LFU cache
     under clipped-zipf(a) traffic over ``rows`` ids.
 
-    Traffic model matches ``data/jagged.random_jagged_batch(zipf_a=a)``:
-    ranks are zipf(a) with infinite support, clipped to ``rows`` — the
-    whole rank tail collapses onto the LAST row, which therefore carries
-    enough mass to be cache-resident itself.  The steady-state LFU cache
-    holds the ``cache_rows`` most frequent rows; the hit rate is their
-    probability mass.
+    Traffic model matches ``core/jagged.random_jagged_batch(zipf_a=a)``:
+
+      * ``a > 1`` — ranks are zipf(a) with infinite support, clipped to
+        ``rows``: the whole rank tail collapses onto the LAST row, which
+        therefore carries enough mass to be cache-resident itself;
+      * ``0 < a <= 1`` — the infinite-support zeta diverges, so traffic
+        is the TRUNCATED zeta over exactly ``rows`` ranks
+        (``p_k = k^-a / H(rows, a)``, the harmonic sum at ``a == 1``).
+        This is far from uniform: at a = 0.9 the top 20% of 64K rows
+        already absorbs ~85% of lookups.  (The old model priced any
+        a <= 1 as uniform ``cache_rows / rows`` — wildly undercounting
+        the cache's value for mildly-skewed traffic.)
+
+    The steady-state LFU cache holds the ``cache_rows`` most frequent
+    rows; the hit rate is their probability mass.  ``a <= 0`` (uniform
+    or anti-skewed) degenerates to ``cache_rows / rows``.
     """
     if cache_rows <= 0:
         return 0.0
-    if cache_rows >= rows or a <= 1.0:
-        return 1.0 if cache_rows >= rows else cache_rows / rows
+    if cache_rows >= rows:
+        return 1.0
+    if a <= 0.0:
+        return cache_rows / rows
+    c = min(cache_rows, rows)
+    if a <= 1.0:
+        return min(1.0, _gen_harmonic(c, a) / _gen_harmonic(rows, a))
     zeta = _gen_harmonic(1 << 24, a) + \
         ((1 << 24) ** (1 - a)) / (a - 1)            # ζ(a)
     clamp = zeta - _gen_harmonic(rows - 1, a)        # mass of the last row
-    c = min(cache_rows, rows)
     # top-c set: either the c hottest head rows, or c-1 head + clamp row
     head_only = _gen_harmonic(c, a)
     with_clamp = _gen_harmonic(c - 1, a) + clamp
     return min(1.0, max(head_only, with_clamp) / zeta)
 
 
+def _expected_new_rows(lo: int, hi: int, Z: float, a: float,
+                       n: float) -> float:
+    """sum_{k=lo..hi} 1 - (1 - k^-a / Z)^n — expected distinct rows of
+    rank lo..hi touched by ``n`` iid lookups.  Exact (vectorized) over
+    the first 2^20 ranks; beyond that every row's per-batch probability
+    is tiny, so the linear binomial head ``n * p_k`` is summed
+    analytically through the harmonic mass (a slight over-estimate,
+    vanishing as n * p_k -> 0)."""
+    if hi < lo:
+        return 0.0
+    m = hi - lo + 1
+    exact = min(m, 1 << 20)
+    k = np.arange(lo, lo + exact, dtype=np.float64)
+    p = np.minimum(k ** -a / Z, 1.0)
+    e = float((1.0 - np.power(1.0 - p, n)).sum())
+    if m > exact:
+        tail_mass = (_gen_harmonic(hi, a)
+                     - _gen_harmonic(lo + exact - 1, a)) / Z
+        e += n * tail_mass
+    return e
+
+
+def expected_unique_misses(a: float, rows: int, cache_rows: int,
+                           lookups: int) -> float:
+    """Expected DISTINCT missed rows in one batch of ``lookups`` iid
+    clipped-zipf(a) lookups against the steady-state top-``cache_rows``
+    residency (the :func:`zipf_hit_rate` model, same traffic/residency).
+
+    This is what the real bag fetches per batch — each missed ROW moves
+    once per prefetch (``CacheStats.fetch_host``/``fetch_remote``),
+    however many of the batch's lookups hit it.  Charging per missed
+    LOOKUP instead (the pre-fix model) over-prices fetch traffic
+    whenever a cold row repeats within a batch.
+    """
+    if lookups <= 0 or cache_rows >= rows:
+        return 0.0
+    c = max(0, int(cache_rows))
+    n = float(lookups)
+    if a <= 0.0:                       # uniform traffic
+        p = 1.0 / rows
+        return (rows - c) * (1.0 - (1.0 - p) ** n)
+    if a <= 1.0:                       # truncated zeta over [1, rows]
+        Z = _gen_harmonic(rows, a)
+        return _expected_new_rows(c + 1, rows, Z, a, n)
+    # a > 1: infinite-support zipf clipped to ``rows`` — the rank tail
+    # collapses onto the LAST row (mass ``clamp``).  Mirror the
+    # residency choice zipf_hit_rate makes for the top-c set.
+    zeta = _gen_harmonic(1 << 24, a) + \
+        ((1 << 24) ** (1 - a)) / (a - 1)
+    clamp = zeta - _gen_harmonic(rows - 1, a)
+    clamp_term = 1.0 - (1.0 - min(clamp / zeta, 1.0)) ** n
+    if c == 0:                             # empty cache: every row misses
+        return _expected_new_rows(1, rows - 1, zeta, a, n) + clamp_term
+    head_only = _gen_harmonic(c, a)
+    with_clamp = _gen_harmonic(c - 1, a) + clamp
+    if with_clamp >= head_only:
+        # resident: c-1 head rows + the clamp row; misses: ranks c..rows-1
+        return _expected_new_rows(c, rows - 1, zeta, a, n)
+    # resident: c head rows; misses: ranks c+1..rows-1 plus the clamp row
+    return _expected_new_rows(c + 1, rows - 1, zeta, a, n) + clamp_term
+
+
 def tiered_phase_times(
     w: EmbeddingWorkload, hw: Hardware, *, hit_rate: float, hosts: int = 1,
-    onesided: bool = False,
+    onesided: bool = False, zipf_a: float = None, rows: int = None,
+    cache_rows: int = None,
 ) -> Dict[str, float]:
     """Per-phase seconds of the tiered serving path whose cold tier spans
     ``hosts`` hosts (host 0 = the serving rank, RW row split §4.2).
@@ -264,15 +352,25 @@ def tiered_phase_times(
     The permute/reduce-scatter phases of the distributed pipeline are
     GONE: that is the whole trade the cache makes.
 
-    Miss traffic is charged once per missed LOOKUP while the real bag
-    moves each missed ROW once (CacheStats.bytes_h2d/bytes_remote); the
-    two agree at steady state, where misses live in the zipf tail and a
-    cold row almost never repeats within a batch — for cold caches this
-    is an upper bound on the transfer.
+    Miss-fetch pricing: the real bag moves each missed ROW once per
+    batch (``CacheStats.bytes_h2d``/``bytes_remote`` count unique
+    fetched rows), however many lookups repeat it.  When the caller
+    supplies the traffic model (``zipf_a`` + per-table ``rows`` +
+    ``cache_rows``), fetch bytes are priced by
+    :func:`expected_unique_misses` so the modeled transfer matches
+    measured ``CacheStats`` — that is what makes a planner-emitted
+    plan's prices checkable.  Without the traffic model the fallback
+    charges once per missed LOOKUP via ``hit_rate``: an upper bound,
+    exact only when no cold row repeats within a batch.
     """
     lookups = w.batch_per_device * w.num_tables * w.pooling
     row_bytes = w.dim * w.dtype_bytes
-    miss_bytes = (1.0 - hit_rate) * lookups * row_bytes
+    if zipf_a is not None and rows is not None and cache_rows is not None:
+        per_table = w.batch_per_device * w.pooling
+        miss_bytes = w.num_tables * row_bytes * expected_unique_misses(
+            zipf_a, rows, cache_rows, per_table)
+    else:
+        miss_bytes = (1.0 - hit_rate) * lookups * row_bytes
     out = {
         "prefetch_h2d": 0.0,
         "fetch_remote": 0.0,
@@ -289,15 +387,18 @@ def tiered_phase_times(
 
 def tiered_embedding_bag_time(
     w: EmbeddingWorkload, hw: Hardware, *, hit_rate: float, hosts: int = 1,
-    onesided: bool = False,
+    onesided: bool = False, zipf_a: float = None, rows: int = None,
+    cache_rows: int = None,
 ) -> float:
     return sum(tiered_phase_times(
-        w, hw, hit_rate=hit_rate, hosts=hosts, onesided=onesided).values())
+        w, hw, hit_rate=hit_rate, hosts=hosts, onesided=onesided,
+        zipf_a=zipf_a, rows=rows, cache_rows=cache_rows).values())
 
 
 def overlapped_phase_times(
     w: EmbeddingWorkload, hw: Hardware, *, hit_rate: float, hosts: int = 1,
-    onesided: bool = False, depth: int = 2,
+    onesided: bool = False, depth: int = 2, zipf_a: float = None,
+    rows: int = None, cache_rows: int = None,
 ) -> Dict[str, float]:
     """Steady-state per-batch phases of the PIPELINED tiered path
     (repro/pipeline/): depth >= 2 double-buffers the slot pool so batch
@@ -313,7 +414,8 @@ def overlapped_phase_times(
     (``overlap`` = 0): the serialized engine exactly.
     """
     out = dict(tiered_phase_times(
-        w, hw, hit_rate=hit_rate, hosts=hosts, onesided=onesided))
+        w, hw, hit_rate=hit_rate, hosts=hosts, onesided=onesided,
+        zipf_a=zipf_a, rows=rows, cache_rows=cache_rows))
     fetch = out["prefetch_h2d"] + out["fetch_remote"]
     out["overlap"] = -min(fetch, out["gather"]) if depth >= 2 else 0.0
     return out
@@ -321,13 +423,15 @@ def overlapped_phase_times(
 
 def overlapped_embedding_bag_time(
     w: EmbeddingWorkload, hw: Hardware, *, hit_rate: float, hosts: int = 1,
-    onesided: bool = False, depth: int = 2,
+    onesided: bool = False, depth: int = 2, zipf_a: float = None,
+    rows: int = None, cache_rows: int = None,
 ) -> float:
     """Steady-state per-batch seconds of the pipelined tiered path:
     ``max(prefetch, forward)`` at depth >= 2, the serialized sum at 1."""
     return sum(overlapped_phase_times(
         w, hw, hit_rate=hit_rate, hosts=hosts, onesided=onesided,
-        depth=depth).values())
+        depth=depth, zipf_a=zipf_a, rows=rows,
+        cache_rows=cache_rows).values())
 
 
 def pipelined_speedup_vs_distributed(
@@ -382,7 +486,8 @@ def cache_speedup_vs_distributed(
 def tiered_speedup_vs_distributed(
     table_bytes: float, w: EmbeddingWorkload, hw: Hardware, *,
     hit_rate: float, hosts: int, fetch_onesided: bool = False,
-    dist_onesided: bool = False,
+    dist_onesided: bool = False, zipf_a: float = None, rows: int = None,
+    cache_rows: int = None,
 ) -> float:
     """Fig. 9 recovery with a CLUSTER-WIDE cold tier.
 
@@ -395,7 +500,8 @@ def tiered_speedup_vs_distributed(
     n = devices_for_table(table_bytes, hw)
     dist = embedding_bag_time(w, n, hw, onesided=dist_onesided)
     tiered = tiered_embedding_bag_time(
-        w, hw, hit_rate=hit_rate, hosts=hosts, onesided=fetch_onesided)
+        w, hw, hit_rate=hit_rate, hosts=hosts, onesided=fetch_onesided,
+        zipf_a=zipf_a, rows=rows, cache_rows=cache_rows)
     return dist / tiered
 
 

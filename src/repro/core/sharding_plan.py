@@ -71,6 +71,10 @@ class Placement:
     est_time_s: float
     cache_rows: int = 0    # slot-pool rows per table ("cached" only)
     est_hit_rate: float = 0.0
+    # position of ``table`` in the sequence given to plan() — the stable
+    # identity used by the engine round trip (names may be duplicated:
+    # every benchmark sweep builds T same-named specs)
+    index: int = -1
 
 
 @dataclasses.dataclass
@@ -78,17 +82,59 @@ class ShardingPlan:
     placements: List[Placement]
     per_shard_bytes: List[int]
 
+    def _by_name(self, name: str) -> Placement:
+        matches = [p for p in self.placements if p.table.name == name]
+        if not matches:
+            raise KeyError(name)
+        if len(matches) > 1:
+            # never guess between duplicate-named specs: the old
+            # first-match lookup silently aliased every duplicate to one
+            # placement — address by position instead
+            raise KeyError(
+                f"ambiguous table name {name!r}: {len(matches)} placements"
+                f" share it — look up by position (placement_at /"
+                f" cache_rows_vector)")
+        return matches[0]
+
     def strategy_of(self, name: str) -> str:
-        for p in self.placements:
-            if p.table.name == name:
-                return p.strategy
-        raise KeyError(name)
+        return self._by_name(name).strategy
 
     def cache_rows_of(self, name: str) -> int:
+        return self._by_name(name).cache_rows
+
+    def placement_at(self, index: int) -> Placement:
+        """The placement of the ``index``-th table passed to plan()."""
         for p in self.placements:
-            if p.table.name == name:
-                return p.cache_rows
-        raise KeyError(name)
+            if p.index == index:
+                return p
+        raise KeyError(f"no placement for table index {index}")
+
+    def cache_rows_vector(self, num_tables: int, *,
+                          default: int = 0) -> List[int]:
+        """Per-table slot counts in INPUT order — the engine's ``S_t``.
+
+        Tables the planner placed "cached" contribute their priced
+        ``cache_rows``; every other strategy gets ``default`` (the
+        engine's uniform fallback).  Raises if the plan does not cover
+        exactly tables ``0..num_tables-1``.
+        """
+        out = [None] * num_tables
+        for p in self.placements:
+            if not 0 <= p.index < num_tables:
+                raise ValueError(
+                    f"placement index {p.index} outside the engine's"
+                    f" {num_tables} tables — the plan was built for a"
+                    f" different table set")
+            if out[p.index] is not None:
+                raise ValueError(
+                    f"duplicate placement for table index {p.index}")
+            out[p.index] = p.cache_rows if p.strategy == "cached" \
+                and p.cache_rows > 0 else default
+        missing = [i for i, v in enumerate(out) if v is None]
+        if missing:
+            raise ValueError(
+                f"plan has no placement for table indices {missing}")
+        return out
 
 
 def _tw_time(t: TableSpec, batch: int, n: int, hw: Hardware) -> float:
@@ -128,8 +174,13 @@ def _cached_candidate(
         if pool_bytes > budget_left:
             continue
         hr = zipf_hit_rate(zipf_a, t.rows, cache_rows)
+        # zipf_a/rows/cache_rows switch the miss pricing to expected
+        # UNIQUE missed rows per batch — what the bag actually fetches
+        # (CacheStats.fetch_host/fetch_remote), so the planner's prices
+        # are checkable against measured serving stats
         time = tiered_embedding_bag_time(
-            w, hw, hit_rate=hr, hosts=hosts, onesided=onesided)
+            w, hw, hit_rate=hr, hosts=hosts, onesided=onesided,
+            zipf_a=zipf_a, rows=t.rows, cache_rows=cache_rows)
         if best is None or time < best[0]:
             best = (time, cache_rows, hr)
     return best
@@ -158,7 +209,7 @@ def plan(
     """
     loads = [0] * num_shards
     placements: List[Placement] = []
-    for t in sorted(tables, key=lambda t: -t.bytes):
+    for idx, t in sorted(enumerate(tables), key=lambda it: -it[1].bytes):
         tw = _tw_time(t, batch_per_shard, num_shards, hw)
         rw = _rw_time(t, batch_per_shard, num_shards, hw)
         target = min(range(num_shards), key=lambda s: loads[s])
@@ -175,10 +226,10 @@ def plan(
             loads[target] += cache_rows * t.dim * t.dtype_bytes
             placements.append(Placement(t, "cached", target, time,
                                         cache_rows=cache_rows,
-                                        est_hit_rate=hr))
+                                        est_hit_rate=hr, index=idx))
         elif fits_tw and tw <= rw:
             loads[target] += t.bytes
-            placements.append(Placement(t, "table", target, tw))
+            placements.append(Placement(t, "table", target, tw, index=idx))
         else:
             # ceil over ROWS (the split unit), not a floor over bytes: a
             # floor-divided remainder would vanish from the accounting and
@@ -187,5 +238,5 @@ def plan(
             per = -(-t.rows // num_shards) * t.dim * t.dtype_bytes
             for s in range(num_shards):
                 loads[s] += per
-            placements.append(Placement(t, "row", -1, rw))
+            placements.append(Placement(t, "row", -1, rw, index=idx))
     return ShardingPlan(placements, loads)

@@ -32,6 +32,13 @@ correctness never depends on residency history — a batch's working set
 is always fully resident in ITS buffer before its forward runs, and the
 pooled output is bitwise-invariant to slot layout.
 
+Heterogeneous pools (the planner -> engine round trip) compose freely:
+``cfg.cache_rows_per_table`` sizes every buffer's per-table ``S_t``
+identically — each buffer is a full padded ``(T, max(S_t), D)`` pool
+with its own per-table capacity/eviction metadata, and the shared
+``CacheStats`` accumulates the per-table hit/miss/eviction splits from
+every buffer's plans (``stats_kwargs`` carries them on both paths).
+
 The facade methods (``prefetch_arrays`` / ``pool`` / ``stats``) make
 this class a drop-in for :class:`~repro.cache.CachedEmbeddingBag` in
 ``DLRMEngine.flush`` — the serialized path simply serves from the live

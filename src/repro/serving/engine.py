@@ -216,6 +216,14 @@ class DLRMEngine:
     ``cfg.remote_hosts`` peer ranks fetched cross-host at flush
     (``comm.fetch_rows``); ``cfg.warmup_freqs`` pre-admits the logged-hot
     rows so the first flushes skip the cold-start miss burst.
+
+    ``cfg.sharding_plan`` closes the planner -> engine round trip: each
+    "cached" ``Placement.cache_rows`` sizes THAT table's slot pool
+    (heterogeneous ``S_t`` in one padded pool — tables mapped by
+    position, never by name), and the per-table measured hit rate
+    (``cache_stats().hit_rate_t``) is directly comparable against the
+    plan's priced ``est_hit_rate`` — see
+    benchmarks/plan_roundtrip_sweep.py.
     """
 
     def __init__(self, params, cfg: DLRMConfig, batch_size: int,
@@ -225,14 +233,25 @@ class DLRMEngine:
         self.queue: List[CTRRequest] = []
 
         self.cache = None
-        if cfg.cache_rows > 0:
+        if cfg.cache_rows > 0 or cfg.sharding_plan is not None:
             if ctx is not None:
                 raise NotImplementedError(
                     "DLRMEngine: the tiered cache path scores on a single "
                     "serving device (cache_rows > 0 with a ParallelContext "
                     "is not supported) — a cluster-wide COLD tier is "
                     "cfg.cold_tier='remote', which manages its own mesh")
-            if cfg.cache_rows < cfg.pooling:
+            per_table = cfg.cache_rows_vector()
+            if per_table is not None:
+                # plan-driven heterogeneous pools: EVERY table's own S_t
+                # must fit a single request's working set
+                small = [(t, s) for t, s in enumerate(per_table)
+                         if s < cfg.pooling]
+                if small:
+                    raise ValueError(
+                        f"sharding_plan slot pools {small} are smaller "
+                        f"than pooling ({cfg.pooling}) — every table's "
+                        f"cache_rows must fit one request's working set")
+            elif cfg.cache_rows < cfg.pooling:
                 raise ValueError(
                     f"cache_rows ({cfg.cache_rows}) must be >= pooling "
                     f"({cfg.pooling}) so a single request's working set "
@@ -401,11 +420,12 @@ class PipelinedDLRMEngine(DLRMEngine):
                 f"PipelinedDLRMEngine needs pipeline_depth >= 2 (got "
                 f"{cfg.pipeline_depth}); depth 1 is the serialized "
                 f"DLRMEngine — use make_dlrm_engine to pick by config")
-        if cfg.cache_rows <= 0:
+        if cfg.cache_rows <= 0 and cfg.sharding_plan is None:
             raise ValueError(
                 "PipelinedDLRMEngine requires the tiered cache "
-                "(cfg.cache_rows > 0): with fully device-resident tables "
-                "there is no prefetch stage to overlap")
+                "(cfg.cache_rows > 0 or a cfg.sharding_plan): with fully "
+                "device-resident tables there is no prefetch stage to "
+                "overlap")
         from repro.pipeline import PipelineScheduler, PipelineTrace
 
         super().__init__(params, cfg, batch_size, ctx)

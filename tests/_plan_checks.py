@@ -1,0 +1,203 @@
+"""Multi-rank plan-round-trip checks, run as a SUBPROCESS on a FORCED
+4-device CPU backend by tests/test_plan_roundtrip.py (XLA_FLAGS must be
+set before jax import; the rest of the suite keeps the real single
+device).
+
+Covers planner-driven HETEROGENEOUS per-table slot pools over a
+cluster-wide cold tier: a ``sharding_plan.plan``-emitted plan with >= 2
+distinct per-table ``cache_rows`` drives ``make_dlrm_engine`` against a
+``RemoteStore`` (tables row-split over 4 simulated hosts), and the
+scores must stay BITWISE equal to the uncached direct forward under
+per-table eviction churn — serialized AND pipelined
+(``pipeline_depth=2``, double-buffered heterogeneous pools).  Also
+checks the bag-level contract directly: per-table capacities isolate
+(only the overflowing table raises), padding slots beyond a table's own
+S_t are never allocated in any buffer, and the per-table stats splits
+sum to the totals.
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
+import dataclasses
+import sys
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from repro.cache import CachedEmbeddingBag, RemoteStore
+from repro.configs import dlrm as dlrm_cfg
+from repro.core.embedding_bag import (
+    EmbeddingBagConfig, init_tables, pooled_lookup_local,
+)
+from repro.core.jagged import JaggedBatch, random_jagged_batch
+from repro.core.perf_model import H100_DGX
+from repro.core.sharding_plan import TableSpec, plan
+from repro.models import dlrm as dlrm_mod
+from repro.pipeline import DoubleBufferedSlotPool
+from repro.serving.engine import (
+    CTRRequest, DLRMEngine, PipelinedDLRMEngine, make_dlrm_engine,
+)
+
+failures = []
+
+
+def check(name, fn):
+    try:
+        fn()
+        print(f"PASS {name}")
+    except Exception as e:  # noqa: BLE001
+        failures.append(name)
+        import traceback
+        traceback.print_exc()
+        print(f"FAIL {name}: {e}")
+
+
+def _smoke_plan(base):
+    """A planner-emitted plan over the smoke config's tables whose tight
+    budget forces >= 2 DISTINCT per-table cache_rows."""
+    specs = [TableSpec(f"t{i}", rows=base.rows_per_table,
+                       dim=base.embedding_dim, pooling=base.pooling)
+             for i in range(base.num_sparse_features)]
+    p = plan(specs, num_shards=2, batch_per_shard=4,
+             hbm_budget_bytes=4000, hw=H100_DGX, zipf_a=0.9)
+    sizes = {pl.cache_rows for pl in p.placements if pl.strategy == "cached"}
+    assert len(sizes) >= 2, f"plan not heterogeneous: {sizes}"
+    return p
+
+
+def _requests(cfg, n, rng):
+    """Zipf traffic with a shifting id window so the small per-table
+    pools churn (evictions) while hot rows keep repeating."""
+    T, L, F = (cfg.num_sparse_features, cfg.pooling,
+               cfg.num_dense_features)
+    R = cfg.rows_per_table
+    reqs = []
+    for rid in range(n):
+        ranks = np.minimum(rng.zipf(1.2, size=(T, L)) - 1, R - 1)
+        window = (ranks + (rid // 3) * (R // 4)) % R
+        idx = np.where(rng.random((T, L)) < 0.33, window, ranks)
+        reqs.append(CTRRequest(
+            rid=rid, dense=rng.standard_normal(F).astype(np.float32),
+            indices=idx.astype(np.int32),
+            lengths=rng.integers(1, L + 1, T).astype(np.int32)))
+    return reqs
+
+
+def _assert_per_table_invariants(mgr):
+    """Dead padding never allocated; live slots within each table's S_t."""
+    for t in range(mgr.T):
+        st = mgr.slots_per_table[t]
+        assert (mgr.id_of_slot[t, st:] == -2).all(), \
+            f"table {t}: padding slot allocated"
+        assert mgr.slot_of_id[t].max() < st
+
+
+def plan_driven_remote_bitwise_serialized_and_pipelined():
+    """The acceptance check: a plan-emitted heterogeneous plan serves
+    through make_dlrm_engine over the remote cold tier, bitwise-equal to
+    the uncached oracle, serialized AND at pipeline_depth=2."""
+    base = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference",
+                               cold_tier="remote", cache_policy="lru")
+    p = _smoke_plan(base)
+    cfg = dataclasses.replace(base, sharding_plan=p)
+    params = dlrm_mod.init_params(jax.random.key(0), base)
+    serial = make_dlrm_engine(params, cfg, batch_size=3)
+    piped = make_dlrm_engine(
+        params, dataclasses.replace(cfg, pipeline_depth=2), batch_size=3)
+    assert type(serial) is DLRMEngine
+    assert isinstance(piped, PipelinedDLRMEngine)
+    assert isinstance(piped.cache, DoubleBufferedSlotPool)
+    assert isinstance(serial.cache.cold, RemoteStore)
+    want_slots = np.asarray(cfg.cache_rows_vector())
+    assert (serial.cache.mgr.slots_per_table == want_slots).all()
+    for buf in piped.cache.buffers:
+        assert (buf.mgr.slots_per_table == want_slots).all()
+
+    rng = np.random.default_rng(1)
+    reqs = _requests(base, 24, rng)
+    for r in reqs:
+        serial.submit(r)
+        piped.submit(r)
+    got_s = serial.run_to_completion()
+    got_p = piped.run_to_completion()
+    assert sorted(got_s) == sorted(got_p) == list(range(24))
+    # uncached direct forward, request by request
+    for r in reqs:
+        jb = JaggedBatch(jnp.asarray(r.indices[:, None, :]),
+                         jnp.asarray(r.lengths[:, None]))
+        want = float(jax.nn.sigmoid(dlrm_mod.forward(
+            params, jnp.asarray(r.dense[None]), jb, base))[0])
+        assert abs(got_s[r.rid] - want) < 1e-6, (r.rid, got_s[r.rid], want)
+        assert got_p[r.rid] == got_s[r.rid], \
+            f"pipelined != serialized on rid {r.rid}"
+
+    for eng in (serial, piped):
+        s = eng.cache_stats()
+        assert s.evictions > 0, "no per-table churn — the check lost teeth"
+        assert s.misses_remote > 0 and s.bytes_remote > 0
+        assert s.hits_t is not None
+        assert int(s.hits_t.sum()) == s.hits
+        assert int(s.misses_t.sum()) == s.misses
+        assert int(s.evictions_t.sum()) == s.evictions
+    _assert_per_table_invariants(serial.cache.mgr)
+    for buf in piped.cache.buffers:
+        _assert_per_table_invariants(buf.mgr)
+    # the small pools are the churn source: at least one small table
+    # evicted while serving stayed exact
+    small = np.flatnonzero(want_slots == want_slots.min())
+    assert serial.cache_stats().evictions_t[small].sum() > 0
+
+
+def per_table_pools_remote_churn_bitwise():
+    """Bag-level: heterogeneous pools over the remote tier stay bitwise
+    under LRU churn, and capacity isolates per table (only the table
+    whose own S_t overflows raises)."""
+    cfg = EmbeddingBagConfig(num_tables=2, rows_per_table=256, dim=8,
+                             kernel_mode="reference",
+                             cache_rows_per_table=(32, 8),
+                             cold_tier="remote", cache_policy="lru")
+    tables = init_tables(jax.random.key(2), cfg)
+    bag = CachedEmbeddingBag(tables, cfg)
+    assert isinstance(bag.cold, RemoteStore)
+    assert bag.mgr.S == 32 and bag.pool.shape == (2, 32, 8)
+    rng = np.random.default_rng(3)
+    for i in range(6):
+        lo = (i * 32) % 192
+        idx = rng.integers(lo, lo + 24, (2, 2, 4)).astype(np.int32)
+        idx[1] = rng.integers(lo, lo + 8, (2, 4))   # fit table 1's 8 slots
+        b = JaggedBatch(jnp.asarray(idx),
+                        jnp.full((2, 2), 4, jnp.int32))
+        got = bag.lookup(b)
+        want = pooled_lookup_local(tables, b, cfg)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    s = bag.stats
+    assert s.evictions_t[1] > 0            # the 8-slot table churned
+    assert s.misses_remote > 0
+    _assert_per_table_invariants(bag.mgr)
+    # capacity isolation: 9 unique rows overflow ONLY table 1
+    from repro.cache import CacheCapacityError
+    idx = np.zeros((2, 3, 3), np.int32)
+    idx[1] = np.arange(9).reshape(3, 3)
+    resident_before = bag.mgr.resident_rows
+    try:
+        bag.prefetch_arrays(idx, np.full((2, 3), 3, np.int32))
+        raise AssertionError("expected CacheCapacityError")
+    except CacheCapacityError as e:
+        assert "table 1" in str(e)
+    assert bag.mgr.resident_rows == resident_before   # atomic refusal
+
+
+def run_all():
+    check("plan_driven_remote_bitwise_serialized_and_pipelined",
+          plan_driven_remote_bitwise_serialized_and_pipelined)
+    check("per_table_pools_remote_churn_bitwise",
+          per_table_pools_remote_churn_bitwise)
+
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("ALL PLAN CHECKS PASS")
+
+
+if __name__ == "__main__":
+    run_all()

@@ -1,6 +1,7 @@
 """α–β model calibration against the paper's own observations (§3, §5)."""
 import numpy as np
 
+from repro.core.jagged import random_jagged_batch
 from repro.core.perf_model import (
     H100_DGX,
     TPU_V5E,
@@ -13,6 +14,7 @@ from repro.core.perf_model import (
     embedding_bag_time,
     local_vs_distributed_speedup,
     phase_times,
+    tiered_phase_times,
     zipf_hit_rate,
 )
 from repro.core.sharding_plan import TableSpec, plan
@@ -119,6 +121,58 @@ def test_zipf_hit_rate_calibration():
     rates = [zipf_hit_rate(1.2, 1 << 20, c) for c in (0, 100, 10000, 1 << 20)]
     assert rates == sorted(rates)
     assert rates[0] == 0.0 and rates[-1] == 1.0
+
+
+def test_zipf_hit_rate_low_a_matches_empirical_traffic():
+    """Regression (the a <= 1 bug): the closed form must match the
+    empirical mass of the model's resident set under the SAME traffic
+    ``random_jagged_batch`` generates, across both regimes.  The old
+    model returned uniform ``cache_rows / rows`` for any a <= 1 —
+    c/R = 0.0625 here, 5x off at a = 0.6."""
+    rng = np.random.default_rng(0)
+    R, c = 4096, 256
+    for a in (0.6, 1.0, 1.2):
+        b = random_jagged_batch(rng, 1, 512, 64, R, zipf_a=a)
+        ids = np.asarray(b.indices).ravel()
+        if a > 1:
+            # clipped-infinite regime at these shapes: the clamp row's
+            # tail mass beats the c-th head row, so it is resident
+            emp = np.mean((ids < c - 1) | (ids == R - 1))
+        else:
+            emp = np.mean(ids < c)         # truncated-zeta top-c
+        model = zipf_hit_rate(a, R, c)
+        assert abs(model - emp) < 0.02, (a, model, emp)
+    assert zipf_hit_rate(0.6, R, c) > 4 * c / R    # nothing like uniform
+    assert zipf_hit_rate(0.0, R, c) == c / R       # a <= 0 IS uniform
+    # monotone in cache size in the low-a regime too
+    rates = [zipf_hit_rate(0.8, R, s) for s in (0, 64, 512, R)]
+    assert rates == sorted(rates)
+    assert rates[0] == 0.0 and rates[-1] == 1.0
+
+
+def test_tiered_phase_times_unique_miss_pricing():
+    """Regression (the per-lookup fetch charge): given the traffic
+    model, fetch bytes are priced by expected unique missed ROWS per
+    batch — strictly below the per-lookup charge whenever cold rows
+    repeat within a batch, and identical in the limit where they
+    don't."""
+    w = EmbeddingWorkload(num_tables=1, batch_per_device=64, pooling=8,
+                          dim=128)
+    a, R, c = 0.6, 512, 64                 # heavy within-batch repeats
+    hr = zipf_hit_rate(a, R, c)
+    old = tiered_phase_times(w, H100_DGX, hit_rate=hr)
+    new = tiered_phase_times(w, H100_DGX, hit_rate=hr, zipf_a=a, rows=R,
+                             cache_rows=c)
+    assert new["gather"] == old["gather"]
+    assert new["prefetch_h2d"] < 0.8 * old["prefetch_h2d"]
+    # full cache -> no fetch phase either way
+    full = tiered_phase_times(w, H100_DGX, hit_rate=1.0, zipf_a=a, rows=R,
+                              cache_rows=R)
+    assert full["prefetch_h2d"] == 0.0
+    # remote split still applies to the unique-miss payload
+    rem = tiered_phase_times(w, H100_DGX, hit_rate=hr, hosts=8, zipf_a=a,
+                             rows=R, cache_rows=c)
+    assert rem["fetch_remote"] > 0.0
 
 
 def test_cached_phase_times_hit_rate_lever():

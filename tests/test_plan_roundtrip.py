@@ -1,0 +1,397 @@
+"""Planner -> engine round trip: heterogeneous per-table slot pools,
+positional plan lookups, the warmup LRU-tick fix, and the unique-miss
+fetch pricing — single-device tests here; the multi-rank remote-tier
+checks run tests/_plan_checks.py in a subprocess with a FORCED 4-device
+CPU backend."""
+import dataclasses
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.cache import CacheCapacityError, CachedEmbeddingBag, SlotPoolManager
+from repro.configs import dlrm as dlrm_cfg
+from repro.core.embedding_bag import (
+    EmbeddingBagConfig,
+    init_tables,
+    make_cache,
+    pooled_lookup_local,
+)
+from repro.core.jagged import JaggedBatch, random_jagged_batch
+from repro.core.perf_model import (
+    H100_DGX,
+    expected_unique_misses,
+    zipf_hit_rate,
+)
+from repro.core.sharding_plan import Placement, ShardingPlan, TableSpec, plan
+from repro.models import dlrm as dlrm_mod
+from repro.serving.engine import (
+    CTRRequest,
+    DLRMEngine,
+    PipelinedDLRMEngine,
+    make_dlrm_engine,
+)
+
+
+# ---------------------------------------------------------------------------
+# Multi-rank integration (subprocess, forced 4-device CPU)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.timeout(900)
+def test_plan_multirank_suite():
+    script = os.path.join(os.path.dirname(__file__), "_plan_checks.py")
+    env = dict(os.environ)
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env["PYTHONPATH"] = os.path.join(root, "src")
+    proc = subprocess.run(
+        [sys.executable, script], env=env, capture_output=True, text=True,
+        timeout=880)
+    sys.stdout.write(proc.stdout[-4000:])
+    sys.stderr.write(proc.stderr[-4000:])
+    assert proc.returncode == 0, "plan multi-rank checks failed"
+
+
+# ---------------------------------------------------------------------------
+# Heterogeneous per-table pools (single device, host cold tier)
+# ---------------------------------------------------------------------------
+
+def _cfg(T=3, R=256, D=8, per_table=(64, 16, 32), **kw):
+    return EmbeddingBagConfig(num_tables=T, rows_per_table=R, dim=D,
+                              kernel_mode="reference",
+                              cache_rows_per_table=per_table, **kw)
+
+
+def test_heterogeneous_pools_bitwise_under_churn():
+    cfg = _cfg()
+    tables = init_tables(jax.random.key(0), cfg)
+    cache = make_cache(tables, cfg)
+    assert (cache.mgr.slots_per_table == [64, 16, 32]).all()
+    assert cache.pool.shape == (3, 64, cfg.dim)     # padded to max(S_t)
+    rng = np.random.default_rng(0)
+    for _ in range(6):
+        b = random_jagged_batch(rng, 3, 8, 5, 256, fixed_pooling=False,
+                                zipf_a=1.1)
+        got = cache.lookup(b)
+        want = pooled_lookup_local(tables, b, cfg)
+        np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    s = cache.stats
+    assert s.evictions_t is not None and s.evictions_t[1] > 0
+    # padding slots beyond each table's own S_t are never allocated
+    for t in range(3):
+        st = cache.mgr.slots_per_table[t]
+        assert (cache.mgr.id_of_slot[t, st:] == -2).all()
+        assert cache.mgr.slot_of_id[t].max() < st
+        # indirection invariant per table
+        res = cache.mgr.resident_ids(t)
+        slots = cache.mgr.slot_of_id[t][res]
+        assert np.array_equal(np.sort(cache.mgr.id_of_slot[t][slots]), res)
+
+
+def test_per_table_capacity_error_is_isolated_and_atomic():
+    """Only the table whose OWN S_t overflows raises; nothing mutates."""
+    cfg = _cfg(per_table=(64, 4, 64))
+    cache = make_cache(init_tables(jax.random.key(1), cfg), cfg)
+    idx = np.zeros((3, 2, 3), np.int32)
+    idx[1] = np.arange(6).reshape(2, 3)       # 6 unique > table 1's 4 slots
+    with pytest.raises(CacheCapacityError, match="table 1"):
+        cache.prefetch_arrays(idx, np.full((3, 2), 3, np.int32))
+    assert cache.mgr.resident_rows == 0       # atomic refusal
+    assert cache.stats.lookups == 0
+    # the same working set against the 64-slot tables is fine
+    idx[1] = 0
+    cache.prefetch_arrays(idx, np.full((3, 2), 3, np.int32))
+
+
+def test_per_table_stats_splits_sum_to_totals():
+    cfg = _cfg(per_table=(64, 24, 32))
+    cache = make_cache(init_tables(jax.random.key(2), cfg), cfg)
+    rng = np.random.default_rng(1)
+    for _ in range(4):
+        cache.prefetch(random_jagged_batch(rng, 3, 8, 5, 256, zipf_a=1.2))
+    s = cache.stats
+    assert s.hits_t.shape == (3,)
+    assert int(s.hits_t.sum()) == s.hits
+    assert int(s.misses_t.sum()) == s.misses
+    assert int(s.evictions_t.sum()) == s.evictions
+    assert np.all(s.hit_rate_t >= 0) and np.all(s.hit_rate_t <= 1)
+    assert np.allclose(s.hit_rate_t,
+                       s.hits_t / np.maximum(s.hits_t + s.misses_t, 1))
+    d = s.as_dict()
+    for k in ("hits_t", "misses_t", "evictions_t", "hit_rate_t"):
+        assert isinstance(d[k], list) and len(d[k]) == 3
+    s.reset()
+    assert s.hits_t is None and s.hit_rate_t is None
+    assert s.as_dict()["hits_t"] is None
+
+
+def test_scalar_cache_rows_path_unchanged():
+    """Back-compat: the uniform scalar and an equal-valued vector drive
+    identical admission/eviction decisions and identical outputs."""
+    base = dict(num_tables=2, rows_per_table=128, dim=8,
+                kernel_mode="reference")
+    cfg_s = EmbeddingBagConfig(cache_rows=16, **base)
+    cfg_v = EmbeddingBagConfig(cache_rows_per_table=(16, 16), **base)
+    tables = init_tables(jax.random.key(3), cfg_s)
+    a, b = make_cache(tables, cfg_s), make_cache(tables, cfg_v)
+    rng = np.random.default_rng(2)
+    for _ in range(5):
+        batch = random_jagged_batch(rng, 2, 6, 4, 128, zipf_a=1.2)
+        np.testing.assert_array_equal(np.asarray(a.lookup(batch)),
+                                      np.asarray(b.lookup(batch)))
+    assert (a.mgr.slot_of_id == b.mgr.slot_of_id).all()
+    assert a.stats.as_dict()["hits"] == b.stats.as_dict()["hits"]
+    assert (a.mgr.slots_per_table == b.mgr.slots_per_table).all()
+
+
+def test_manager_slot_vector_validation():
+    with pytest.raises(ValueError, match="per-table slots"):
+        SlotPoolManager(3, rows=64, slots=[8, 8])          # wrong length
+    with pytest.raises(ValueError, match="positive"):
+        SlotPoolManager(2, rows=64, slots=[8, 0])
+    m = SlotPoolManager(2, rows=8, slots=[100, 4])         # capped at rows
+    assert m.slots_per_table.tolist() == [8, 4] and m.S == 8
+
+
+# ---------------------------------------------------------------------------
+# ShardingPlan lookups: positional identity, duplicate names (satellite)
+# ---------------------------------------------------------------------------
+
+def _dup_plan():
+    spec = TableSpec("t", rows=1000, dim=16, pooling=4)
+    return ShardingPlan(
+        [Placement(spec, "cached", 0, 1e-6, cache_rows=64,
+                   est_hit_rate=0.9, index=0),
+         Placement(spec, "cached", 0, 1e-6, cache_rows=16,
+                   est_hit_rate=0.5, index=1),
+         Placement(spec, "row", -1, 1e-6, index=2)],
+        [64 * 16 * 4])
+
+
+def test_duplicate_name_lookup_raises_positional_works():
+    p = _dup_plan()
+    with pytest.raises(KeyError, match="ambiguous"):
+        p.cache_rows_of("t")
+    with pytest.raises(KeyError, match="ambiguous"):
+        p.strategy_of("t")
+    with pytest.raises(KeyError):
+        p.cache_rows_of("nope")
+    # positional identity never aliases
+    assert p.placement_at(0).cache_rows == 64
+    assert p.placement_at(1).cache_rows == 16
+    assert p.placement_at(2).strategy == "row"
+    with pytest.raises(KeyError):
+        p.placement_at(3)
+    assert p.cache_rows_vector(3, default=7) == [64, 16, 7]
+    with pytest.raises(ValueError, match="no placement"):
+        p.cache_rows_vector(4)
+    with pytest.raises(ValueError, match="outside"):
+        p.cache_rows_vector(2)
+
+
+def test_unique_name_lookup_still_works():
+    specs = [TableSpec(f"t{i}", rows=1000, dim=16, pooling=4)
+             for i in range(3)]
+    p = plan(specs, num_shards=2, batch_per_shard=8, hbm_budget_bytes=1e9)
+    for i, s in enumerate(specs):
+        assert p.strategy_of(s.name) == p.placement_at(i).strategy
+    assert sorted(pl.index for pl in p.placements) == [0, 1, 2]
+
+
+def test_planner_emits_positional_indices_with_duplicate_names():
+    """The default benchmark-sweep shape: T same-named specs must keep
+    distinct positional placements (the old name-keyed lookup aliased
+    them all to the first match)."""
+    specs = [TableSpec("t", rows=2048, dim=16, pooling=8) for _ in range(6)]
+    p = plan(specs, num_shards=2, batch_per_shard=8,
+             hbm_budget_bytes=48_000, hw=H100_DGX, zipf_a=0.9)
+    vec = p.cache_rows_vector(6, default=8)
+    assert len(set(vec)) >= 2            # heterogeneous under the budget
+    with pytest.raises(KeyError, match="ambiguous"):
+        p.cache_rows_of("t")
+
+
+# ---------------------------------------------------------------------------
+# Warmup LRU tick (satellite): warmup residents must be strictly older
+# ---------------------------------------------------------------------------
+
+def test_warmup_then_serve_lru_eviction_order():
+    """Deterministic warmup-then-serve script: the victim must be the
+    warmup-admitted-but-never-used row, not the row traffic just
+    touched.  Before the tick fix both were stamped at the same tick and
+    argpartition broke the tie by slot order — evicting the JUST-USED
+    row 0 (slot 0)."""
+    cfg = EmbeddingBagConfig(num_tables=1, rows_per_table=32, dim=4,
+                             kernel_mode="reference", cache_rows=2,
+                             cache_policy="lru")
+    tables = init_tables(jax.random.key(4), cfg)
+    freqs = np.zeros((1, 32))
+    freqs[0, 0], freqs[0, 1] = 5, 4          # warmup admits rows 0, 1
+    bag = make_cache(tables, dataclasses.replace(cfg, warmup_freqs=freqs))
+    assert set(bag.mgr.resident_ids(0)) == {0, 1}
+    assert bag.mgr.tick == 1                 # pre-advanced past warmup
+
+    def feed(ids):
+        arr = jnp.asarray(np.array(ids, np.int32).reshape(1, 1, -1))
+        bag.prefetch(JaggedBatch(arr, jnp.full((1, 1), len(ids), jnp.int32)))
+
+    feed([0])          # touch row 0 (stamped strictly later than warmup)
+    feed([5])          # eviction: stale warmup resident 1, NOT row 0
+    assert set(bag.mgr.resident_ids(0)) == {0, 5}
+    feed([9])          # next LRU victim is 5? no — 0 is now the oldest
+    assert set(bag.mgr.resident_ids(0)) == {5, 9}
+
+
+# ---------------------------------------------------------------------------
+# Unique-miss fetch pricing (satellite): model vs measured warm sweep
+# ---------------------------------------------------------------------------
+
+def test_expected_unique_misses_matches_monte_carlo():
+    """Pure numpy Monte-Carlo of the traffic model vs the closed form —
+    and the old per-lookup charge is measurably wrong where cold rows
+    repeat within a batch (a=0.6: ~40% over)."""
+    rng = np.random.default_rng(0)
+    for a, R, c, n in ((0.6, 512, 64, 512), (1.0, 512, 64, 256),
+                       (1.2, 1024, 128, 512)):
+        b = random_jagged_batch(rng, 200, 1, n, R, zipf_a=a)
+        ids = np.asarray(b.indices).reshape(200, n)
+        if a > 1:
+            resident = lambda x: (x < c - 1) | (x == R - 1)  # noqa: E731
+        else:
+            resident = lambda x: x < c                        # noqa: E731
+        mc = np.mean([len(np.unique(row[~resident(row)])) for row in ids])
+        model = expected_unique_misses(a, R, c, n)
+        assert abs(model - mc) / mc < 0.05, (a, model, mc)
+    # the per-lookup charge (what tiered_phase_times used to bill) is off
+    old = (1 - zipf_hit_rate(0.6, 512, 64)) * 512
+    new = expected_unique_misses(0.6, 512, 64, 512)
+    assert old > new * 1.3
+    # degenerate ends stay finite and bounded (empty cache: every row
+    # misses; rank 0 must not enter the a > 1 power sum)
+    with np.errstate(all="raise"):
+        for a in (0.6, 1.0, 1.2):
+            v = expected_unique_misses(a, 1000, 0, 64)
+            assert 0.0 < v <= 64.0
+        assert expected_unique_misses(1.2, 1000, 1000, 64) == 0.0
+
+
+def test_unique_miss_pricing_matches_measured_warm_sweep():
+    """Warm LFU bag: measured unique fetched rows per batch must match
+    expected_unique_misses — the regression that makes the planner's
+    fetch prices checkable against CacheStats."""
+    T, R, c, B, L, a = 2, 8192, 1024, 32, 8, 1.0
+    cfg = EmbeddingBagConfig(num_tables=T, rows_per_table=R, dim=8,
+                             kernel_mode="reference", cache_rows=c)
+    tables = init_tables(jax.random.key(5), cfg)
+    freqs = np.arange(1, R + 1, dtype=np.float64) ** -a * 1e6
+    bag = make_cache(tables, dataclasses.replace(cfg, warmup_freqs=freqs))
+    rng = np.random.default_rng(3)
+    for _ in range(8):
+        bag.prefetch(random_jagged_batch(rng, T, B, L, R, zipf_a=a))
+    bag.stats.reset()
+    M = 30
+    for _ in range(M):
+        bag.prefetch(random_jagged_batch(rng, T, B, L, R, zipf_a=a))
+    measured = bag.stats.fetch_host / M
+    model = T * expected_unique_misses(a, R, c, B * L)
+    assert abs(measured - model) / measured < 0.10, (measured, model)
+    # hit-rate side of the same sweep: the truncated-zeta closed form
+    assert abs(bag.stats.hit_rate - zipf_hit_rate(a, R, c)) < 0.03
+
+
+# ---------------------------------------------------------------------------
+# Engine round trip (host tier; the remote tier runs in _plan_checks.py)
+# ---------------------------------------------------------------------------
+
+def _smoke_plan(base):
+    specs = [TableSpec(f"t{i}", rows=base.rows_per_table,
+                       dim=base.embedding_dim, pooling=base.pooling)
+             for i in range(base.num_sparse_features)]
+    return plan(specs, num_shards=2, batch_per_shard=4,
+                hbm_budget_bytes=4000, hw=H100_DGX, zipf_a=0.9)
+
+
+def test_engine_consumes_sharding_plan():
+    base = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference")
+    p = _smoke_plan(base)
+    cfg = dataclasses.replace(base, sharding_plan=p)
+    vec = cfg.cache_rows_vector()
+    assert len(set(vec)) >= 2              # heterogeneous
+    params = dlrm_mod.init_params(jax.random.key(0), base)
+    eng = make_dlrm_engine(params, cfg, batch_size=4)
+    assert type(eng) is DLRMEngine and eng.cache is not None
+    assert eng.params["tables"] is None    # HBM holds only the pool
+    assert (eng.cache.mgr.slots_per_table == np.asarray(vec)).all()
+    rng = np.random.default_rng(4)
+    T, L, F = (cfg.num_sparse_features, cfg.pooling,
+               cfg.num_dense_features)
+    reqs = [CTRRequest(
+        rid=i, dense=rng.standard_normal(F).astype(np.float32),
+        indices=rng.integers(0, base.rows_per_table, (T, L)).astype(
+            np.int32),
+        lengths=rng.integers(1, L + 1, T).astype(np.int32))
+        for i in range(10)]
+    for r in reqs:
+        eng.submit(r)
+    out = eng.run_to_completion()
+    for r in reqs:
+        jb = JaggedBatch(jnp.asarray(r.indices[:, None, :]),
+                         jnp.asarray(r.lengths[:, None]))
+        want = float(jax.nn.sigmoid(dlrm_mod.forward(
+            params, jnp.asarray(r.dense[None]), jb, base))[0])
+        assert abs(out[r.rid] - want) < 1e-6
+    s = eng.cache_stats()
+    assert s.hits_t is not None and s.hit_rate_t.shape == (T,)
+
+
+def test_pipelined_engine_accepts_plan_and_matches_serialized():
+    base = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference")
+    p = _smoke_plan(base)
+    cfg = dataclasses.replace(base, sharding_plan=p)
+    params = dlrm_mod.init_params(jax.random.key(0), base)
+    serial = make_dlrm_engine(params, cfg, batch_size=4)
+    piped = make_dlrm_engine(
+        params, dataclasses.replace(cfg, pipeline_depth=2), batch_size=4)
+    assert isinstance(piped, PipelinedDLRMEngine)
+    rng = np.random.default_rng(5)
+    T, L, F = (cfg.num_sparse_features, cfg.pooling,
+               cfg.num_dense_features)
+    for i in range(12):
+        r = CTRRequest(
+            rid=i, dense=rng.standard_normal(F).astype(np.float32),
+            indices=np.minimum(rng.zipf(1.2, (T, L)) - 1,
+                               base.rows_per_table - 1).astype(np.int32),
+            lengths=rng.integers(1, L + 1, T).astype(np.int32))
+        serial.submit(r)
+        piped.submit(r)
+    want = serial.run_to_completion()
+    got = piped.run_to_completion()
+    assert got == want                      # bitwise, dict-equal
+
+
+def test_engine_rejects_plan_pool_below_pooling():
+    base = dlrm_cfg.smoke()
+    spec = TableSpec("t", rows=base.rows_per_table,
+                     dim=base.embedding_dim, pooling=base.pooling)
+    tiny = ShardingPlan(
+        [Placement(spec, "cached", 0, 1e-6, cache_rows=base.pooling - 1,
+                   est_hit_rate=0.5, index=i)
+         for i in range(base.num_sparse_features)], [0])
+    cfg = dataclasses.replace(base, sharding_plan=tiny)
+    params = dlrm_mod.init_params(jax.random.key(0), base)
+    with pytest.raises(ValueError, match="pooling"):
+        DLRMEngine(params, cfg, batch_size=2)
+
+
+def test_random_jagged_batch_low_a_sampler():
+    rng = np.random.default_rng(6)
+    b = random_jagged_batch(rng, 1, 64, 16, 256, zipf_a=0.7)
+    ids = np.asarray(b.indices)
+    assert ids.min() >= 0 and ids.max() < 256
+    # skewed: the head quarter carries well over a quarter of the mass
+    assert np.mean(ids < 64) > 0.35
+    with pytest.raises(ValueError, match="zipf_a"):
+        random_jagged_batch(rng, 1, 4, 4, 64, zipf_a=-0.5)
