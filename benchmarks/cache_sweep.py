@@ -31,6 +31,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import CacheConfig
 from repro.core.embedding_bag import (
     EmbeddingBagConfig,
     pooled_lookup_local,
@@ -70,9 +71,10 @@ def count_cached_launches(shape: dict) -> int:
 
     cfg = EmbeddingBagConfig(
         num_tables=shape["tables"], rows_per_table=shape["rows"],
-        dim=shape["dim"], kernel_mode="interpret", cache_rows=64)
+        dim=shape["dim"], kernel_mode="interpret",
+        cache=CacheConfig(rows=64))
     host = np.zeros((shape["tables"], 64, shape["dim"]), np.float32)
-    bag = CachedEmbeddingBag(host, cfg, cache_rows=64)
+    bag = CachedEmbeddingBag(host, cfg)
     pool = jax.ShapeDtypeStruct(bag.pool.shape, bag.pool.dtype)
     idx = jax.ShapeDtypeStruct(
         (shape["tables"], shape["batch"], shape["pooling"]), jnp.int32)
@@ -90,7 +92,7 @@ def run_config(ratio: float, a: float, policy: str, shape: dict,
     cache_rows = max(1, int(R * ratio))
     cfg = EmbeddingBagConfig(
         num_tables=T, rows_per_table=R, dim=D, kernel_mode=kernel_mode,
-        cache_rows=cache_rows, cache_policy=policy)
+        cache=CacheConfig(rows=cache_rows, policy=policy))
     rng = np.random.default_rng(int(1000 * ratio) + int(100 * a))
     host = rng.standard_normal((T, R, D), dtype=np.float32)
     bag = CachedEmbeddingBag(host, cfg)

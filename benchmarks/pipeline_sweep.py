@@ -43,7 +43,7 @@ from repro.core.perf_model import (
     tiered_embedding_bag_time,
     tiered_speedup_vs_distributed,
 )
-from repro.cache import HostStore
+from repro.cache import CacheConfig, HostStore
 from repro.models import dlrm as dlrm_mod
 from repro.serving.engine import CTRRequest, make_dlrm_engine
 
@@ -89,13 +89,13 @@ class _NICDelayedHostStore(HostStore):
 
 def _prewarm_scatter_buckets(engine) -> None:
     """Compile the donated pool-scatter for every power-of-two row-count
-    bucket a flush can hit, via bitwise no-op scatters (each writes slot
-    (0, 0)'s own payload back).  Keeps one-off jit compiles out of the
+    bucket a flush can hit, via bitwise no-op scatters (each writes flat
+    slot 0's own payload back).  Keeps one-off jit compiles out of the
     measured spans — the jit cache is shared, so this is cheap."""
     cache = engine.cache
     bags = cache.buffers if hasattr(cache, "buffers") else [cache]
     for bag in bags:
-        row0 = np.asarray(bag.pool)[:1, 0]          # (1, D) slot (0, 0)
+        row0 = np.asarray(bag.pool)[:1]             # (1, D) flat slot 0
         for m in (1, 2, 4, 8, 16, 32, 64, 128, 256, 512, 1024, 2048,
                   4096, 8192, 16384, 32768):
             bag.hot.scatter(np.zeros(m, np.int64),
@@ -133,8 +133,7 @@ def measured(shape: dict) -> dict:
         bottom_mlp=(256, shape["dim"]),
         top_mlp=(2048, 1024, 512, 1),
         kernel_mode="reference",          # CPU-tractable; same kernel both
-        cache_rows=shape["cache"],
-        cache_policy="lru",
+        cache=CacheConfig(rows=shape["cache"], policy="lru"),
     )
     B, n_batches = shape["batch"], shape["warmup"]
     params = dlrm_mod.init_params(jax.random.key(0), cfg)
@@ -143,7 +142,10 @@ def measured(shape: dict) -> dict:
 
     serial = make_dlrm_engine(params, cfg, batch_size=B)
     piped = make_dlrm_engine(
-        params, dataclasses.replace(cfg, pipeline_depth=2), batch_size=B)
+        params,
+        dataclasses.replace(
+            cfg, cache=dataclasses.replace(cfg.cache, pipeline_depth=2)),
+        batch_size=B)
     # ONE shared NIC-modeled cold tier behind both engines (see above)
     nic = _NICDelayedHostStore(np.asarray(params["tables"]))
     serial.cache.cold = nic

@@ -12,7 +12,10 @@ the plan and checking the prices against measured ``CacheStats``:
     one plan carries >= 2 DISTINCT per-table ``cache_rows`` (asserted).
   * MEASURED — ``make_dlrm_engine`` consumes the plan via
     ``DLRMConfig.sharding_plan`` (heterogeneous per-table slot pools in
-    one padded device pool), serves zipf traffic warmed from the same
+    ONE FLAT ``(sum S_t, D)`` device pool — exactly
+    ``slot_pool_bytes`` on device, strictly less than the padded
+    ``T x max(S_t)`` rectangle; asserted), serves zipf traffic warmed
+    from the same
     popularity statistics the planner assumed, and the per-table
     measured hit rate (``CacheStats.hit_rate_t``) must land within
     ``TOL_HIT`` of each placement's ``est_hit_rate`` (asserted).  Engine
@@ -46,6 +49,8 @@ from repro.core.jagged import JaggedBatch, random_jagged_batch
 from repro.core.perf_model import (
     H100_DGX,
     expected_unique_misses,
+    padded_slot_pool_bytes,
+    slot_pool_bytes,
     zipf_hit_rate,
 )
 from repro.core.sharding_plan import TableSpec, plan
@@ -94,13 +99,26 @@ def roundtrip(shape, p):
     # (the offline ids_freq_mapping): residency starts at each table's
     # top-S_t, which is exactly the steady state est_hit_rate assumes
     freqs = (np.arange(1, R + 1, dtype=np.float64) ** -ZIPF_A) * 1e7
-    cfg = dataclasses.replace(base, sharding_plan=p, warmup_freqs=freqs)
+    cfg = dataclasses.replace(
+        base, sharding_plan=p,
+        cache=dataclasses.replace(base.cache, warmup_freqs=freqs))
     params = dlrm_mod.init_params(jax.random.key(0), base)
     eng = make_dlrm_engine(params, cfg, batch_size=shape["batch"])
     slots = eng.cache.mgr.slots_per_table
+    # the flat pool's whole point: exactly sum(S_t) rows on device, no
+    # padding to max(S_t) — measured bytes must equal the exact price
+    # and undercut the padded rectangle whenever the plan is heterogeneous
+    flat_b = slot_pool_bytes(slots, shape["dim"])
+    padded_b = padded_slot_pool_bytes(slots, shape["dim"])
+    assert eng.cache.pool.shape == (int(slots.sum()), shape["dim"])
+    assert eng.cache.hot.live_nbytes == flat_b == eng.cache.hot.nbytes, \
+        (eng.cache.hot.live_nbytes, flat_b, eng.cache.hot.nbytes)
+    assert flat_b < padded_b, \
+        f"flat pool {flat_b} B must shrink below padded {padded_b} B"
     print(f"# engine slot vector S_t = {slots.tolist()} "
-          f"(padded pool {tuple(eng.cache.pool.shape)}, "
-          f"live {eng.cache.hot.live_nbytes} / {eng.cache.hot.nbytes} B)")
+          f"(flat pool {tuple(eng.cache.pool.shape)}: {flat_b} B vs "
+          f"{padded_b} B padded to max S_t — saves "
+          f"{1 - flat_b / padded_b:.1%})")
 
     rng = np.random.default_rng(7)
     rid = 0

@@ -41,6 +41,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.cache import CacheConfig
 from repro.core import comm
 from repro.core.embedding_bag import (
     EmbeddingBagConfig,
@@ -81,9 +82,10 @@ def measured(shape: dict) -> dict:
     R, T, D = shape["rows"], shape["tables"], shape["dim"]
     cfg = EmbeddingBagConfig(
         num_tables=T, rows_per_table=R, dim=D, kernel_mode="interpret",
-        cache_rows=max(shape["batch"] * shape["pooling"],
-                       int(R * shape["ratio"])),
-        cold_tier="remote")
+        cache=CacheConfig(
+            rows=max(shape["batch"] * shape["pooling"],
+                     int(R * shape["ratio"])),
+            cold_tier="remote"))
     tables = init_tables(jax.random.key(0), cfg)
     bag = make_cache(tables, cfg)
     rng = np.random.default_rng(7)

@@ -5,10 +5,11 @@ embedding store serving path.
     PYTHONPATH=src python examples/dlrm_inference.py
 
 Single device: serves batched CTR requests through ``DLRMEngine`` with
-the tiered cache configured ENTIRELY through ``DLRMConfig`` tier fields
-(cache_rows / cache_policy / cold_tier / warmup_freqs) — the engine's
-HBM holds only the slot pool, the cold tables stay host-resident — and
-cross-checks the scores against the uncached direct forward.
+the tiered cache configured ENTIRELY through ``DLRMConfig.cache`` (one
+``CacheConfig`` carrying rows / policy / cold_tier / warmup_freqs) —
+the engine's HBM holds only the flat slot pool, the cold tables stay
+host-resident — and cross-checks the scores against the uncached
+direct forward.
 
 With >1 devices (XLA_FLAGS=--xla_force_host_platform_device_count=8) it
 additionally compares all distributed sharding strategies (RW both
@@ -22,6 +23,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
+from repro.cache import CacheConfig
 from repro.configs import dlrm as dlrm_cfg
 from repro.core import comm
 from repro.core.jagged import JaggedBatch, random_jagged_batch
@@ -38,10 +40,12 @@ def serve_tiered(base, params, rng):
     freqs = (1.0 / np.arange(1, base.rows_per_table + 1)) * 1e4
     cfg = dataclasses.replace(
         base,
-        cache_rows=max(base.pooling, base.rows_per_table // 8),
-        cache_policy="lfu",
-        cold_tier="host",            # "remote" once >1 hosts back the store
-        warmup_freqs=freqs,          # skip the cold-start miss burst
+        cache=CacheConfig(
+            rows=max(base.pooling, base.rows_per_table // 8),
+            policy="lfu",
+            cold_tier="host",        # "remote" once >1 hosts back the store
+            warmup_freqs=freqs,      # skip the cold-start miss burst
+        ),
     )
     engine = DLRMEngine(params, cfg, batch_size=8)
     assert engine.params["tables"] is None, "HBM must hold only the pool"

@@ -24,13 +24,14 @@ from repro.serving.engine import ContinuousBatcher, Request
 
 def serve_dlrm_pipelined():
     """Depth-2 pipelined CTR scoring vs the serialized engine."""
+    from repro.cache import CacheConfig
     from repro.configs import dlrm as dlrm_cfg
     from repro.models import dlrm as dlrm_mod
     from repro.serving.engine import CTRRequest, make_dlrm_engine
 
     base = dataclasses.replace(
         dlrm_cfg.smoke(), kernel_mode="reference",
-        cache_rows=32, cache_policy="lru")
+        cache=CacheConfig(rows=32, policy="lru"))
     params = dlrm_mod.init_params(jax.random.key(0), base)
     T, L, F = (base.num_sparse_features, base.pooling,
                base.num_dense_features)
@@ -44,10 +45,13 @@ def serve_dlrm_pipelined():
                                base.rows_per_table - 1).astype(np.int32),
             lengths=rng.integers(1, L + 1, T).astype(np.int32)))
 
-    # engine selection is pure config: pipeline_depth 1 vs 2
+    # engine selection is pure config: cache.pipeline_depth 1 vs 2
     serial = make_dlrm_engine(params, base, batch_size=8)
     piped = make_dlrm_engine(
-        params, dataclasses.replace(base, pipeline_depth=2), batch_size=8)
+        params,
+        dataclasses.replace(
+            base, cache=dataclasses.replace(base.cache, pipeline_depth=2)),
+        batch_size=8)
     for r in reqs:
         serial.submit(r)
         piped.submit(r)

@@ -18,9 +18,9 @@ granularity and with JAX's functional-update discipline:
     table per embedding table, the reverse slot->id map, and persistent
     per-row frequency counters driving LFU admission-eviction (LRU via
     per-slot touch ticks);
-  * a fixed ``(T, S, D)`` device SLOT POOL (cached_bag.py) updated by
-    one flat scatter per prefetch — never reallocated, so the jitted
-    consumer recompiles exactly once;
+  * one fixed FLAT ``(sum S_t, D)`` device SLOT POOL (tiers.py /
+    cached_bag.py) updated by one flat scatter per prefetch — never
+    reallocated, so the jitted consumer recompiles exactly once;
   * an explicit two-step serving protocol: ``prefetch(batch)`` pins the
     batch's working set device-side and returns slot-remapped indices;
     the lookup then runs the SAME fused TBE ``pallas_call`` as the
@@ -34,11 +34,13 @@ Exactness contract: after ``prefetch``, the pooled output is bitwise
 equal to the uncached oracle (same kernel, same summation order, same
 row payloads) — eviction only ever changes WHERE a row is served from.
 
-Integration points: ``EmbeddingBagConfig.cache_rows/cache_policy``,
-``pooled_lookup_cached`` (core/embedding_bag.py),
-``DLRMEngine`` prefetch-at-flush (serving/engine.py), hit-rate
-parameterized projections (core/perf_model.py), and the zipf sweep in
-benchmarks/cache_sweep.py.
+Integration points: ``EmbeddingBagConfig.cache`` (a
+``repro.core.cache_config.CacheConfig`` — THE cache/pipeline knob
+surface; the old flat ``cache_rows``/``cache_policy``/... kwargs are
+deprecated construction-time aliases), ``pooled_lookup_cached``
+(core/embedding_bag.py), ``DLRMEngine`` prefetch-at-flush
+(serving/engine.py), hit-rate parameterized projections
+(core/perf_model.py), and the zipf sweep in benchmarks/cache_sweep.py.
 
 PR 3 generalized the store into a TIER STACK (tiers.py): the slot pool,
 host tables and remote row-shards all implement the small ``TableStore``
@@ -57,35 +59,54 @@ placement strategy against the modeled tiered phase times
 
 PR 5 closed the planner -> engine round trip: ``SlotPoolManager`` takes
 a PER-TABLE slot vector ``S_t`` (a plan's ``Placement.cache_rows``, by
-POSITION — ``Placement.index``), kept in one padded ``(T, max(S_t))``
-slot space so the fused TBE kernel and flat-scatter addressing are
-unchanged; slots beyond a table's own ``S_t`` are ``DEAD_SLOT`` and
-never allocated, and capacity / eviction / warmup run per table.
-``CacheStats`` splits hits/misses/evictions per table (``hit_rate_t``),
-so a served plan's measured hit rates are directly comparable to its
-priced ``est_hit_rate`` — asserted end-to-end by
+POSITION — ``Placement.index``); capacity / eviction / warmup run per
+table, and ``CacheStats`` splits hits/misses/evictions per table
+(``hit_rate_t``), so a served plan's measured hit rates are directly
+comparable to its priced ``est_hit_rate`` — asserted end-to-end by
 benchmarks/plan_roundtrip_sweep.py.
+
+PR 6 flattened the slot space and unified the config surface:
+
+  * FLAT-OFFSET ADDRESSING — the pool is ONE ``(sum S_t, D)`` array,
+    table ``t``'s slots occupying the contiguous segment
+    ``[slot_offsets[t], slot_offsets[t+1])`` where ``slot_offsets`` is
+    the exclusive cumsum of ``S_t`` (``CacheConfig.slot_offsets``, the
+    single geometry definition shared by the host-side manager and the
+    jitted kernel).  Slot ids stay TABLE-LOCAL everywhere — plans,
+    ``slot_of_id``, remapped indices — and flatten only at the two
+    boundaries that touch the flat array: the pool scatter
+    (``PrefetchPlan.flat_addr``) and the fused TBE kernel, whose
+    scalar-prefetched ``row_offsets`` operand turns table-local ids
+    into flat rows at grid-index time.  The old padded ``(T, max S_t,
+    D)`` rectangle (and its ``DEAD_SLOT`` sentinel for never-allocated
+    padding slots) is gone.
+  * EXACT ``live_nbytes`` — with no padding, allocated bytes ==
+    ``sum(S_t) * D * itemsize`` == the planner's priced HBM budget
+    (``core.perf_model.slot_pool_bytes``); heterogeneous plans no
+    longer pay ``max(S_t)`` for every table.
+  * ONE ``CacheConfig`` (repro.core.cache_config) carries every cache /
+    cold-tier / warmup / pipeline knob, threaded as
+    ``EmbeddingBagConfig.cache`` and ``DLRMConfig.cache``; the old flat
+    kwargs survive one deprecation cycle as construction-time aliases.
 """
 from repro.cache.cached_bag import CachedEmbeddingBag, make_cold_store
-from repro.cache.manager import (
-    POLICIES,
-    CacheCapacityError,
-    PrefetchPlan,
-    SlotPoolManager,
-)
+from repro.cache.manager import CacheCapacityError, SlotPoolManager
 from repro.cache.stats import CacheStats
 from repro.cache.tiers import HostStore, RemoteStore, SlotPool, TableStore
+from repro.core.cache_config import CacheConfig
 
+# the public surface: the config, the bag, the tier stack, the stats.
+# Internals (PrefetchPlan, POLICIES, eviction machinery) import from
+# repro.cache.manager directly.
 __all__ = [
+    "CacheConfig",
     "CachedEmbeddingBag",
     "CacheCapacityError",
     "CacheStats",
     "HostStore",
-    "PrefetchPlan",
     "RemoteStore",
     "SlotPool",
     "SlotPoolManager",
     "TableStore",
     "make_cold_store",
-    "POLICIES",
 ]

@@ -1,8 +1,9 @@
 """``CachedEmbeddingBag`` — tiered lookup: HBM slot pool over a cold tier.
 
 The store is a tier stack behind the :class:`repro.cache.tiers.TableStore`
-interface: a fixed ``(T, S, D)`` device :class:`SlotPool` (the hot tier
-the fused TBE kernel reads) fronting ONE cold tier —
+interface: a flat ``(sum S_t, D)`` device :class:`SlotPool` (the hot tier
+the fused TBE kernel addresses through per-table slot offsets) fronting
+ONE cold tier —
 
   * :class:`HostStore` (``cold_tier="host"``): the full ``(T, R, D)``
     tables in the serving host's memory, misses cross the host<->device
@@ -42,6 +43,7 @@ import numpy as np
 from repro.cache.manager import PrefetchPlan, SlotPoolManager
 from repro.cache.stats import CacheStats
 from repro.cache.tiers import HostStore, RemoteStore, SlotPool, TableStore
+from repro.core.cache_config import CacheConfig
 from repro.core.embedding_bag import EmbeddingBagConfig
 from repro.core.jagged import JaggedBatch
 from repro.kernels import ops as kops
@@ -57,21 +59,20 @@ def _valid_mask(indices: np.ndarray, lengths: Optional[np.ndarray]):
     return indices, np.arange(L) < np.asarray(lengths)[..., None]
 
 
-def make_cold_store(tables, cfg: EmbeddingBagConfig) -> TableStore:
-    """Build the cold tier named by ``cfg.cold_tier``."""
-    if cfg.cold_tier == "host":
+def make_cold_store(tables, cache: CacheConfig) -> TableStore:
+    """Build the cold tier named by ``cache.cold_tier``."""
+    if cache.cold_tier == "host":
         return HostStore(tables)
-    if cfg.cold_tier == "remote":
-        return RemoteStore(tables, hosts=cfg.remote_hosts or None,
-                           backend=cfg.remote_backend)
+    if cache.cold_tier == "remote":
+        return RemoteStore(tables, hosts=cache.remote_hosts or None,
+                           backend=cache.remote_backend)
     raise ValueError(
-        f"unknown cold_tier {cfg.cold_tier!r}; pick 'host' or 'remote'")
+        f"unknown cold_tier {cache.cold_tier!r}; pick 'host' or 'remote'")
 
 
 class CachedEmbeddingBag:
     def __init__(self, tables, cfg: EmbeddingBagConfig, *,
-                 cache_rows=None,
-                 policy: Optional[str] = None,
+                 cache: Optional[CacheConfig] = None,
                  cold_store: Optional[TableStore] = None,
                  stats: Optional[CacheStats] = None):
         if cfg.combiner not in ("sum", "mean"):
@@ -79,46 +80,49 @@ class CachedEmbeddingBag:
                 f"CachedEmbeddingBag: combiner {cfg.combiner!r} "
                 f"(EmbeddingBagConfig.combiner) is not supported")
         self.cfg = cfg
+        cc = cache if cache is not None else cfg.cache
+        self.cache_cfg = cc
         tables = np.asarray(tables)
         if tables.ndim != 3:
             raise ValueError(f"tables must be (T, R, D), got {tables.shape}")
         self.cold = cold_store if cold_store is not None \
-            else make_cold_store(tables, cfg)
+            else make_cold_store(tables, cc)
         T, R, D = tables.shape
         self.dtype = tables.dtype
-        # slot sizing: an explicit ``cache_rows`` argument (scalar or
-        # per-table vector) wins, then the config's per-table vector
-        # (the planner -> engine round trip), then the uniform scalar.
-        if cache_rows is not None:
-            S = cache_rows
-        elif cfg.cache_rows_per_table is not None:
-            S = np.asarray(cfg.cache_rows_per_table, np.int64)
+        # slot sizing: the CacheConfig's per-table vector (the planner ->
+        # engine round trip) wins over the uniform scalar.
+        if cc.rows_per_table is not None:
+            S = np.asarray(cc.rows_per_table, np.int64)
         else:
-            S = int(cfg.cache_rows)
+            S = int(cc.rows)
         if np.min(S) <= 0:
             raise ValueError(
-                "cache_rows must be > 0 (for every table) to build a "
-                "CachedEmbeddingBag (set EmbeddingBagConfig.cache_rows / "
-                "cache_rows_per_table or pass cache_rows=)")
+                "cache rows must be > 0 (for every table) to build a "
+                "CachedEmbeddingBag (set CacheConfig.rows / rows_per_table "
+                "on EmbeddingBagConfig.cache)")
         self.mgr = SlotPoolManager(
-            T, R, S,
-            policy if policy is not None else cfg.cache_policy,
+            T, R, S, cc.policy,
             rows_per_host=self.cold.rows_per_host, home=self.cold.home)
         self.hot = SlotPool(T, self.mgr.S, D, self.dtype,
                             slots_per_table=self.mgr.slots_per_table)
+        # the kernel's scalar-prefetched per-table slot offsets — a jit
+        # constant, so the jitted consumer compiles exactly once
+        self._row_offsets = jnp.asarray(self.mgr.slot_offsets[:-1],
+                                        jnp.int32)
         # stats may be SHARED: the double-buffered pipeline pool passes
         # one CacheStats so every buffer's traffic lands in one record
         self.stats = stats if stats is not None else CacheStats()
         self.row_bytes = D * self.dtype.itemsize
-        if cfg.warmup_freqs is not None:
-            self.mgr.seed_frequencies(np.asarray(cfg.warmup_freqs))
+        if cc.warmup_freqs is not None:
+            self.mgr.seed_frequencies(np.asarray(cc.warmup_freqs))
             self._apply_fetch(self.mgr.warmup_admit(), count_batch=False)
 
     # -- tier plumbing -------------------------------------------------------
 
     @property
     def pool(self) -> jax.Array:
-        """The hot tier's ``(T, S, D)`` device array (the kernel operand)."""
+        """The hot tier's flat ``(sum S_t, D)`` device array (the kernel
+        operand)."""
         return self.hot.array
 
     @property
@@ -149,7 +153,7 @@ class CachedEmbeddingBag:
             try:
                 rows = self.cold.fetch(plan.fetch_tables, plan.fetch_rows)
                 ts = time.perf_counter()
-                self.hot.scatter(plan.flat_addr(self.mgr.S), rows)
+                self.hot.scatter(plan.flat_addr(self.mgr.slot_offsets), rows)
                 scatter_s = time.perf_counter() - ts
             except BaseException:
                 self.mgr.invalidate_fetch(plan)
@@ -188,14 +192,17 @@ class CachedEmbeddingBag:
     def device_lookup(self, pool: jax.Array, indices: jax.Array,
                       lengths: Optional[jax.Array],
                       weights: Optional[jax.Array]) -> jax.Array:
-        """Pure hot-path: (T, S, D) pool x (T, B, L) slot ids -> (B, T, D).
+        """Pure hot-path: flat (sum S_t, D) pool x (T, B, L) TABLE-LOCAL
+        slot ids -> (B, T, D).
 
-        One fused TBE ``pallas_call`` (jit/jaxpr-safe: no host state)."""
-        out = kops.embedding_bag_batched(
-            pool, indices, lengths, weights,
-            combiner=self.cfg.combiner, mode=self.cfg.kernel_mode,
-            fused=self.cfg.fused)                            # (T, B, D)
-        return out.transpose(1, 0, 2)
+        One fused TBE ``pallas_call`` over the flat pool, addressed by
+        the manager's scalar-prefetched per-table slot offsets (always
+        fused — a ragged pool has no rectangle to vmap per table).
+        Jit/jaxpr-safe: the offsets are a trace-time constant."""
+        out = kops.embedding_bag_batched_flat(
+            pool, self._row_offsets, indices, lengths, weights,
+            combiner=self.cfg.combiner, mode=self.cfg.kernel_mode)
+        return out.transpose(1, 0, 2)                        # (B, T, D)
 
     def lookup(self, batch: JaggedBatch, *,
                prefetched: bool = False) -> jax.Array:

@@ -11,23 +11,28 @@ State (all numpy, vectorized across rows; a small python loop over the
 T tables):
 
   * ``slot_of_id (T, R) int32`` — the indirection table: row id -> pool
-    slot, -1 when the row is host-only.  Device lookups remap through it.
-  * ``id_of_slot (T, S) int64`` — reverse map, -1 for free slots, -2
-    (``DEAD_SLOT``) for padding slots beyond a table's own capacity.
+    slot (TABLE-LOCAL, in ``[0, S_t)``), -1 when the row is host-only.
+    Device lookups remap through it.
+  * ``id_of_slot (sum S_t,) int64`` — reverse map over the FLAT slot
+    space, -1 for free slots; table ``t``'s slots are the contiguous
+    segment ``[slot_offsets[t], slot_offsets[t+1])``
+    (:meth:`id_of_slot_t` returns the per-table view).
   * ``freq (T, R) int64``       — per-row batch-frequency counters,
     accumulated over every prefetch (they PERSIST across eviction, so a
     re-admitted hot row keeps its rank — CacheEmbedding's
     ``ids_freq_mapping`` made dynamic).
-  * ``last_used (T, S) int64``  — per-slot touch tick for LRU.
+  * ``last_used (sum S_t,) int64`` — per-slot touch tick for LRU, same
+    flat layout as ``id_of_slot``.
 
 Heterogeneous capacity (the planner -> engine round trip): ``slots``
 may be a PER-TABLE vector ``S_t`` — e.g. each ``Placement.cache_rows``
 of a :class:`repro.core.sharding_plan.ShardingPlan` — instead of one
-global size.  The slot space stays ONE padded ``(T, max(S_t))``
-rectangle so the fused TBE kernel and the flat ``t * S + slot`` scatter
-addressing are unchanged; slots ``>= S_t`` of table ``t`` are marked
-``DEAD_SLOT`` at construction and are simply never allocated.  Capacity
-checks, eviction and warmup admission all run against ``S_t``.
+global size.  The slot space is FLAT: table ``t`` owns exactly its own
+``S_t`` slots at offset ``slot_offsets[t] = sum(S_u, u < t)``, matching
+the flat ``(sum S_t, D)`` device pool the fused TBE kernel addresses
+through its scalar-prefetched per-table offsets.  No padding slots
+exist, so there is nothing to mark dead and ``live_nbytes`` is exact.
+Capacity checks, eviction and warmup admission all run against ``S_t``.
 
 Eviction (policy "lfu"): victim = resident slot whose row has the
 smallest frequency counter.  Policy "lru": victim = slot with the oldest
@@ -42,10 +47,6 @@ import dataclasses
 import numpy as np
 
 POLICIES = ("lfu", "lru")
-
-# id_of_slot sentinel for padding slots beyond a table's own capacity
-# S_t (heterogeneous pools): never free, never occupied, never a victim.
-DEAD_SLOT = -2
 
 
 class CacheCapacityError(RuntimeError):
@@ -95,10 +96,13 @@ class PrefetchPlan:
         """Unique fetched rows the serving host owns (h2d traffic)."""
         return int(self.fetch_rows.size - self.fetch_remote_rows)
 
-    def flat_addr(self, slots: int) -> np.ndarray:
-        """Flat pool addresses ``t * S + slot`` of the fetched rows —
-        the SlotPool.scatter address layout, in one place."""
-        return self.fetch_tables.astype(np.int64) * slots + self.fetch_slots
+    def flat_addr(self, slot_offsets: np.ndarray) -> np.ndarray:
+        """Flat pool addresses ``slot_offsets[t] + slot`` of the fetched
+        rows — the SlotPool.scatter address layout, in one place.
+        ``slot_offsets`` is the ``(T + 1,)`` cumulative-``S_t`` vector
+        (``SlotPoolManager.slot_offsets``)."""
+        return np.asarray(slot_offsets, np.int64)[self.fetch_tables] \
+            + self.fetch_slots
 
     def stats_kwargs(self, row_bytes: int) -> dict:
         """The CacheStats.update counters this plan accounts for — used
@@ -124,8 +128,8 @@ class SlotPoolManager:
             raise ValueError(
                 f"unknown cache_policy {policy!r}; pick one of {POLICIES}")
         # ``slots``: one global size, or a per-table vector S_t (the
-        # planner -> engine round trip).  The slot space is padded to
-        # max(S_t); a table's slots beyond its own S_t are DEAD.
+        # planner -> engine round trip).  The slot space is FLAT: table
+        # t owns [slot_offsets[t], slot_offsets[t+1]) — no padding.
         slots_t = np.asarray(slots, np.int64)
         if slots_t.ndim == 0:
             slots_t = np.full(num_tables, int(slots_t), np.int64)
@@ -139,7 +143,13 @@ class SlotPoolManager:
                 f"{slots_t.tolist()}")
         self.slots_per_table = np.minimum(slots_t, rows)
         self.T, self.R = num_tables, rows
+        # largest per-table width (the old padded rectangle's S); kept as
+        # a capacity summary — flat addressing never uses it
         self.S = int(self.slots_per_table.max(initial=0))
+        # flat slot space: table t owns [slot_offsets[t], slot_offsets[t+1])
+        self.slot_offsets = np.zeros(self.T + 1, np.int64)
+        np.cumsum(self.slots_per_table, out=self.slot_offsets[1:])
+        self.total_slots = int(self.slot_offsets[-1])
         self.policy = policy
         # cold-tier ownership layout: row r lives on host r // rows_per_host;
         # rows the serving host (``home``) owns are HOST-tier traffic,
@@ -147,12 +157,9 @@ class SlotPoolManager:
         self.rows_per_host = int(rows_per_host or rows)
         self.home = int(home)
         self.slot_of_id = np.full((self.T, self.R), -1, np.int32)
-        self.id_of_slot = np.full((self.T, self.S), -1, np.int64)
+        self.id_of_slot = np.full(self.total_slots, -1, np.int64)
         self.freq = np.zeros((self.T, self.R), np.int64)
-        self.last_used = np.full((self.T, self.S), -1, np.int64)
-        # padding slots beyond each table's own capacity never allocate
-        for t in range(self.T):
-            self.id_of_slot[t, self.slots_per_table[t]:] = DEAD_SLOT
+        self.last_used = np.full(self.total_slots, -1, np.int64)
         self.tick = 0
         # pool epoch: advanced by the pipeline's buffer swap.  prepare()
         # plans for the CURRENT epoch (serialized serving: admit-then-
@@ -164,6 +171,15 @@ class SlotPoolManager:
         """Owning host of each row id under the cold tier's row split."""
         return (np.asarray(row_ids, np.int64)
                 // self.rows_per_host).astype(np.int32)
+
+    def id_of_slot_t(self, t: int) -> np.ndarray:
+        """Table ``t``'s ``(S_t,)`` segment of the flat reverse map —
+        a WRITABLE view (basic slice) indexed by table-local slot id."""
+        return self.id_of_slot[self.slot_offsets[t]:self.slot_offsets[t + 1]]
+
+    def last_used_t(self, t: int) -> np.ndarray:
+        """Table ``t``'s ``(S_t,)`` segment of the flat LRU ticks (view)."""
+        return self.last_used[self.slot_offsets[t]:self.slot_offsets[t + 1]]
 
     @property
     def resident_rows(self) -> int:
@@ -201,14 +217,18 @@ class SlotPoolManager:
                 raise CacheCapacityError(
                     f"table {t}: batch working set ({uniq.size} unique rows)"
                     f" exceeds the slot pool ({self.slots_per_table[t]} "
-                    f"slots) — raise EmbeddingBagConfig.cache_rows (or this"
-                    f" table's cache_rows_per_table entry) or shrink the"
-                    f" batch")
+                    f"slots) — raise CacheConfig.rows (or this table's "
+                    f"rows_per_table entry) or shrink the batch")
             per_table.append((uniq, counts))
 
         for t in range(T):
             uniq, counts = per_table[t]
             self.freq[t, uniq] += counts
+            # table t's (S_t,) writable views into the flat slot space;
+            # slot ids below stay TABLE-LOCAL (the kernel's offsets and
+            # PrefetchPlan.flat_addr re-add slot_offsets[t])
+            ios = self.id_of_slot_t(t)
+            lru = self.last_used_t(t)
 
             slots_u = self.slot_of_id[t, uniq]
             resident = slots_u >= 0
@@ -219,26 +239,24 @@ class SlotPoolManager:
                 counts[~resident][self._owner(miss_ids) != self.home].sum())
 
             if miss_ids.size:
-                # free slots only: DEAD_SLOT padding beyond this table's
-                # own S_t is never allocated
-                free = np.flatnonzero(self.id_of_slot[t] == -1)
+                free = np.flatnonzero(ios == -1)
                 need = miss_ids.size - free.size
                 if need > 0:
                     victims = self._pick_victims(t, need, slots_u[resident])
-                    evicted = self.id_of_slot[t, victims]
+                    evicted = ios[victims]
                     self.slot_of_id[t, evicted] = -1
-                    self.id_of_slot[t, victims] = -1
+                    ios[victims] = -1
                     evictions_t[t] += need
                     free = np.concatenate([free, victims])
                 target = free[: miss_ids.size]
                 self.slot_of_id[t, miss_ids] = target
-                self.id_of_slot[t, target] = miss_ids
+                ios[target] = miss_ids
                 plan_t.append(np.full(miss_ids.size, t, np.int32))
                 plan_r.append(miss_ids)
                 plan_s.append(target.astype(np.int64))
 
             # LRU touch: every slot referenced by this batch (hit or fresh)
-            self.last_used[t, self.slot_of_id[t, uniq]] = self.tick
+            lru[self.slot_of_id[t, uniq]] = self.tick
 
             slot = self.slot_of_id[t, np.clip(indices[t], 0, self.R - 1)]
             remapped[t] = np.where(slot >= 0, slot, 0)
@@ -321,17 +339,18 @@ class SlotPoolManager:
         admits nothing)."""
         plan_t, plan_r, plan_s = [], [], []
         for t in range(self.T):
+            ios = self.id_of_slot_t(t)
             order = np.argsort(-self.freq[t], kind="stable")
             top = order[: self.slots_per_table[t]]
             top = top[self.freq[t, top] > 0]
             fresh = top[self.slot_of_id[t, top] < 0]
             if not fresh.size:
                 continue
-            free = np.flatnonzero(self.id_of_slot[t] == -1)[: fresh.size]
+            free = np.flatnonzero(ios == -1)[: fresh.size]
             fresh = fresh[: free.size]          # never evict during warmup
             self.slot_of_id[t, fresh] = free
-            self.id_of_slot[t, free] = fresh
-            self.last_used[t, free] = self.tick
+            ios[free] = fresh
+            self.last_used_t(t)[free] = self.tick
             plan_t.append(np.full(fresh.size, t, np.int32))
             plan_r.append(fresh.astype(np.int64))
             plan_s.append(free.astype(np.int64))
@@ -355,16 +374,16 @@ class SlotPoolManager:
 
     def _pick_victims(self, t: int, need: int,
                       pinned_slots: np.ndarray) -> np.ndarray:
-        """``need`` occupied slots to reclaim, never one pinned by the
-        current batch."""
+        """``need`` occupied slots to reclaim (TABLE-LOCAL slot ids),
+        never one pinned by the current batch."""
+        occ = self.id_of_slot_t(t)
         if self.policy == "lfu":
             # score each slot by its row's persistent frequency counter
-            occ = self.id_of_slot[t]
             scores = self.freq[t, np.clip(occ, 0, self.R - 1)].astype(
                 np.float64)
         else:
-            scores = self.last_used[t].astype(np.float64)
-        scores[self.id_of_slot[t] < 0] = np.inf   # free slots aren't victims
+            scores = self.last_used_t(t).astype(np.float64)
+        scores[occ < 0] = np.inf                  # free slots aren't victims
         scores[pinned_slots] = np.inf             # the evict backlist
         victims = np.argpartition(scores, need - 1)[:need]
         if not np.isfinite(scores[victims]).all():
@@ -379,9 +398,9 @@ class SlotPoolManager:
         committed the metadata, so no slot ever claims an uncopied row.
         (Evictions stand — the victims really are gone from the pool.)"""
         self.slot_of_id[plan.fetch_tables, plan.fetch_rows] = -1
-        self.id_of_slot[plan.fetch_tables, plan.fetch_slots] = -1
+        self.id_of_slot[plan.flat_addr(self.slot_offsets)] = -1
 
     def resident_ids(self, t: int) -> np.ndarray:
         """Sorted row ids currently resident for table ``t`` (test hook)."""
-        occ = self.id_of_slot[t]
+        occ = self.id_of_slot_t(t)
         return np.sort(occ[occ >= 0])

@@ -83,6 +83,9 @@ class CacheStats:
     overlap_s: float = 0.0
 
     STAGES = ("prefetch", "scatter", "forward", "overlap")
+    # bump when as_dict() keys change meaning or spelling — benchmark
+    # CSVs and the plan-roundtrip assertions key off this contract
+    SCHEMA_VERSION = 2
 
     @property
     def lookups(self) -> int:
@@ -174,7 +177,16 @@ class CacheStats:
         self.forward_s = self.overlap_s = 0.0
 
     def as_dict(self) -> Dict[str, float]:
+        """Stable serialization schema (``SCHEMA_VERSION``).
+
+        Every key below is ALWAYS present: scalar counters as ints,
+        rates as floats, per-table ``*_t`` splits as plain Python lists
+        (length T) or None before any per-table update, stage timers as
+        float seconds.  Benchmark CSV writers and the plan-roundtrip
+        sweep consume this dict verbatim — never rename a key without
+        bumping ``schema_version``."""
         return {
+            "schema_version": self.SCHEMA_VERSION,
             "hits": self.hits,
             "misses": self.misses,
             "misses_host": self.misses_host,

@@ -5,9 +5,10 @@ host-numpy array.  Scale-out inference deployments hold tables on REMOTE
 hosts precisely because one node can't (capacity-driven scale-out —
 PAPERS.md), so the store is now a tier stack behind one small interface:
 
-  * :class:`SlotPool`   — tier "hbm": the fixed ``(T, S, D)`` device pool
-    the fused TBE kernel reads.  Rows are written by ONE flat scatter per
-    prefetch (jitted, pool donated — in-place on accelerators).
+  * :class:`SlotPool`   — tier "hbm": the flat ``(sum S_t, D)`` device
+    pool the fused TBE kernel reads, addressed by per-table slot offsets
+    (``slot_offsets[t] + slot``).  Rows are written by ONE flat scatter
+    per prefetch (jitted, pool donated — in-place on accelerators).
   * :class:`HostStore`  — tier "host": the full ``(T, R, D)`` tables in
     the serving host's memory (numpy); a fetch is a fancy-index gather
     that crosses the host<->device link.
@@ -85,35 +86,34 @@ class TableStore(abc.ABC):
 @functools.partial(jax.jit, donate_argnums=(0,))
 def _scatter_rows(pool: jax.Array, addr: jax.Array,
                   rows: jax.Array) -> jax.Array:
-    """Write fetched rows into the pool at flat addresses ``t*S + slot``.
+    """Write fetched rows into the flat pool at ``slot_offsets[t] + slot``
+    addresses.
 
     Jitted with the pool DONATED so accelerator backends update the
-    buffer in place — O(M*D) HBM writes per prefetch, not an O(T*S*D)
-    whole-pool copy (an eager ``.at[].set`` cannot alias its input).
+    buffer in place — O(M*D) HBM writes per prefetch, not an
+    O(sum(S_t)*D) whole-pool copy (an eager ``.at[].set`` cannot alias
+    its input).
     """
-    T, S, D = pool.shape
-    return pool.reshape(T * S, D).at[addr].set(rows).reshape(T, S, D)
+    return pool.at[addr].set(rows)
 
 
 class SlotPool(TableStore):
-    """Tier "hbm": the fixed ``(T, S, D)`` device pool the kernel reads.
+    """Tier "hbm": the flat ``(sum S_t, D)`` device pool the kernel reads.
 
-    Never reallocated — ``scatter`` replaces the array functionally (the
+    Table ``t``'s slots are the contiguous rows
+    ``[slot_offsets[t], slot_offsets[t+1])`` — heterogeneous per-table
+    widths ``S_t`` allocate EXACTLY ``sum(S_t) * D * itemsize`` device
+    bytes (no padding rectangle), and the fused TBE kernel addresses the
+    pool through its scalar-prefetched per-table offsets.  Never
+    reallocated — ``scatter`` replaces the array functionally (the
     donated jit updates it in place on accelerators), so the jitted
     consumer compiles exactly once.
-
-    ``slots_per_table`` records a heterogeneous plan's per-table live
-    widths ``S_t`` (the manager never scatters into a table's padding
-    slots ``>= S_t``): the pool stays one padded rectangle so the fused
-    TBE kernel and the flat ``t * S + slot`` addressing are unchanged,
-    while ``live_nbytes`` reports the bytes the plan actually bought.
     """
 
     tier = "hbm"
 
     def __init__(self, num_tables: int, slots: int, dim: int, dtype,
                  *, slots_per_table=None):
-        self.array = jnp.zeros((num_tables, slots, dim), dtype)
         if slots_per_table is None:
             slots_per_table = np.full(num_tables, slots, np.int64)
         self.slots_per_table = np.asarray(slots_per_table, np.int64)
@@ -122,14 +122,18 @@ class SlotPool(TableStore):
             raise ValueError(
                 f"slots_per_table must be ({num_tables},) with entries "
                 f"<= {slots}, got {slots_per_table}")
+        self.slot_offsets = np.zeros(num_tables + 1, np.int64)
+        np.cumsum(self.slots_per_table, out=self.slot_offsets[1:])
+        self.array = jnp.zeros((int(self.slot_offsets[-1]), dim), dtype)
 
     @property
     def slots(self) -> int:
-        return self.array.shape[1]
+        """Largest per-table slot count (the old rectangle's width)."""
+        return int(self.slots_per_table.max(initial=0))
 
     @property
     def rows_per_host(self) -> int:
-        return self.array.shape[1]
+        return self.slots
 
     @property
     def nbytes(self) -> int:
@@ -137,19 +141,19 @@ class SlotPool(TableStore):
 
     @property
     def live_nbytes(self) -> int:
-        """Bytes of ADDRESSABLE slots (sum of per-table live widths) —
-        what a heterogeneous plan charged to the HBM budget; ``nbytes``
-        additionally counts the rectangle's padding."""
-        return int(self.slots_per_table.sum()) * self.array.shape[-1] \
-            * self.array.dtype.itemsize
+        """Bytes of addressable slots. The flat pool has NO padding, so
+        this equals ``nbytes`` exactly — ``sum(S_t) * D * itemsize``, the
+        figure a heterogeneous plan charged to the HBM budget."""
+        return self.nbytes
 
     def fetch(self, t_ids, slot_ids) -> np.ndarray:
         """Read resident payloads back (test/debug hook, device->host)."""
-        return np.asarray(self.array)[np.asarray(t_ids),
-                                      np.asarray(slot_ids)]
+        addr = self.slot_offsets[np.asarray(t_ids)] + np.asarray(slot_ids)
+        return np.asarray(self.array)[addr]
 
     def scatter(self, flat_addr: np.ndarray, rows) -> None:
-        """One flat scatter of (M, D) ``rows`` at ``t*S + slot`` addresses."""
+        """One flat scatter of (M, D) ``rows`` at ``slot_offsets[t] +
+        slot`` addresses (see ``PrefetchPlan.flat_addr``)."""
         flat_addr, rows = _pad_pow2([np.asarray(flat_addr, np.int64),
                                      np.asarray(rows)])
         with warnings.catch_warnings():

@@ -12,8 +12,9 @@ analytically); ``smoke()`` is the CPU test scale.
 from __future__ import annotations
 
 import dataclasses
-from typing import Tuple
+from typing import Optional, Tuple
 
+from repro.core.cache_config import CacheConfig, resolve_cache_aliases
 from repro.core.embedding_bag import EmbeddingBagConfig
 
 
@@ -33,40 +34,41 @@ class DLRMConfig:
     dtype: str = "float32"
     kernel_mode: str = "auto"            # auto | reference | pallas | interpret
     fused: bool = True                   # table-batched (TBE) kernel path
-    # tiered frequency-aware cache (repro/cache/): HBM slot-pool rows per
-    # table over a cold tier; 0 = tables fully device-resident
-    cache_rows: int = 0
-    cache_policy: str = "lfu"            # lfu | lru
-    # cold tier of the cached path: "host" keeps the full tables in the
-    # serving host's memory; "remote" row-splits them over remote_hosts
-    # peer ranks, misses fetched by ONE batched comm.fetch_rows collective
-    # per flush ("bulk" psum_scatter | "onesided" Pallas RDMA puts)
-    cold_tier: str = "host"              # host | remote
-    remote_hosts: int = 0                # 0 = every local device backs a host
-    remote_backend: str = "bulk"         # bulk | onesided
-    # pipelined serving (repro/pipeline/): number of slot-pool buffers in
-    # the double-buffered ring.  1 = serialized DLRMEngine (cold-fetch ->
-    # scatter -> forward per flush); >= 2 selects PipelinedDLRMEngine via
-    # make_dlrm_engine — batch k+1's prefetch targets the shadow buffer
-    # while batch k's forward reads the live one (requires the tiered
-    # cache: cache_rows > 0 or a sharding_plan)
-    pipeline_depth: int = 1
+    # tiered frequency-aware cache + pipelined serving, all knobs in ONE
+    # CacheConfig (repro.core.cache_config): slot-pool sizing (uniform
+    # ``rows`` / per-table ``rows_per_table``), lfu|lru policy, cold tier
+    # ("host" | "remote" + transport), warmup seeding, and pipeline_depth
+    # (1 = serialized DLRMEngine; >= 2 selects PipelinedDLRMEngine via
+    # make_dlrm_engine).  Always normalized to a CacheConfig instance
+    # (never None) after construction.
+    cache: Optional[CacheConfig] = None
+    # DEPRECATED flat aliases of the CacheConfig fields above.  Passing
+    # any of them warns DeprecationWarning and forwards the value into
+    # ``cache``; after construction they read as None (their sentinel) —
+    # read cfg.cache.* instead.  Removal noted in the README.
+    cache_rows: Optional[int] = None
+    cache_policy: Optional[str] = None
+    cold_tier: Optional[str] = None
+    remote_hosts: Optional[int] = None
+    remote_backend: Optional[str] = None
+    pipeline_depth: Optional[int] = None
+    warmup_freqs: object = dataclasses.field(
+        default=None, compare=False, repr=False)
     # planner -> engine round trip: a core.sharding_plan.ShardingPlan
     # whose per-table "cached" Placement.cache_rows size HETEROGENEOUS
-    # slot pools (one padded (T, max S_t, D) device pool; capacity and
+    # slot pools (ONE flat (sum S_t, D) device pool; capacity and
     # eviction per table).  Placements map to tables by POSITION
     # (Placement.index), never by name — benchmark sweeps duplicate
     # names freely.  Tables the planner did not price as "cached" fall
-    # back to the uniform cache_rows scalar (or the pooling floor when
-    # cache_rows == 0).  Data, not architecture: excluded from config
+    # back to the uniform cache.rows scalar (or the pooling floor when
+    # cache.rows == 0).  Data, not architecture: excluded from config
     # equality/hash like warmup_freqs.
     sharding_plan: object = dataclasses.field(
         default=None, compare=False, repr=False)
-    # offline ids_freq_mapping seeding the LFU counters + pre-admitting the
-    # top rows so the engine skips the cold-start miss burst (data, not
-    # architecture: excluded from config equality/hash)
-    warmup_freqs: object = dataclasses.field(
-        default=None, compare=False, repr=False)
+
+    _CACHE_ALIASES = ("cache_rows", "cache_policy", "cold_tier",
+                      "remote_hosts", "remote_backend", "pipeline_depth",
+                      "warmup_freqs")
 
     def __post_init__(self):
         if self.interaction == "dot" and \
@@ -75,20 +77,25 @@ class DLRMConfig:
                 f"dot interaction needs bottom_mlp[-1] "
                 f"({self.bottom_mlp[-1]}) == embedding_dim "
                 f"({self.embedding_dim})")
-        if self.pipeline_depth < 1:
-            raise ValueError(
-                f"pipeline_depth must be >= 1, got {self.pipeline_depth}")
+        cc = resolve_cache_aliases(self, self._CACHE_ALIASES)
+        object.__setattr__(self, "cache", cc)
+        for alias in self._CACHE_ALIASES:
+            object.__setattr__(self, alias, None)
 
     def cache_rows_vector(self):
         """Per-table slot counts the tiered store should use, or None
-        when no plan is attached (uniform ``cache_rows`` path)."""
+        when no plan is attached (uniform ``cache.rows`` path)."""
         if self.sharding_plan is None:
             return None
-        fallback = self.cache_rows if self.cache_rows > 0 else self.pooling
+        fallback = self.cache.rows if self.cache.rows > 0 else self.pooling
         return tuple(self.sharding_plan.cache_rows_vector(
             self.num_sparse_features, default=fallback))
 
     def embedding_config(self) -> EmbeddingBagConfig:
+        cache = self.cache
+        per_table = self.cache_rows_vector()
+        if per_table is not None:
+            cache = dataclasses.replace(cache, rows_per_table=per_table)
         return EmbeddingBagConfig(
             num_tables=self.num_sparse_features,
             rows_per_table=self.rows_per_table,
@@ -99,13 +106,7 @@ class DLRMConfig:
             dtype=self.dtype,
             kernel_mode=self.kernel_mode,
             fused=self.fused,
-            cache_rows=self.cache_rows,
-            cache_rows_per_table=self.cache_rows_vector(),
-            cache_policy=self.cache_policy,
-            cold_tier=self.cold_tier,
-            remote_hosts=self.remote_hosts,
-            remote_backend=self.remote_backend,
-            warmup_freqs=self.warmup_freqs,
+            cache=cache,
         )
 
     @property

@@ -1,0 +1,151 @@
+"""``CacheConfig`` — the unified config surface of the tiered cache.
+
+The cache-serving knobs used to be scattered flat across
+``EmbeddingBagConfig`` and ``DLRMConfig`` (``cache_rows``,
+``cache_policy``, ``cold_tier``, ``remote_hosts``, ``remote_backend``,
+``warmup_freqs``, ``pipeline_depth``): eight kwargs re-listed at every
+layer of the ``make_cache`` / ``make_dlrm_engine`` plumbing.  This module
+is the single dataclass both configs thread through as their ``cache``
+field; the old flat fields survive as construction-time deprecated
+aliases that forward into it (see each config's ``__post_init__``).
+
+It lives in its own leaf module (stdlib + numpy only) so both
+``repro.core.embedding_bag`` and ``repro.cache`` can import it without a
+cycle; ``repro.cache`` re-exports it as the public name.
+
+``slots_per_table``/``slot_offsets`` are the SHARED slot-geometry
+helpers: the :class:`repro.cache.SlotPoolManager` sizes the flat
+``(sum S_t, D)`` device pool from exactly this arithmetic, and the
+jitted forward derives the kernel's scalar-prefetched per-table slot
+offsets from it — one definition, so the two can never disagree.
+"""
+from __future__ import annotations
+
+import dataclasses
+import warnings
+from typing import Optional, Tuple
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CacheConfig:
+    """Every knob of the tiered frequency-aware cache, in one place.
+
+    ``rows``: uniform per-table HBM slot count S (0 disables the cache).
+    ``rows_per_table``: heterogeneous slot vector S_t — one entry per
+      table (typically a ShardingPlan's per-table ``Placement.cache_rows``);
+      overrides the uniform ``rows`` when set.  The device pool is ONE
+      flat ``(sum S_t, D)`` array addressed by per-table slot offsets.
+    ``policy``: "lfu" | "lru" admission-eviction.
+    ``cold_tier``: "host" (serving host's memory) | "remote" (row-split
+      over ``remote_hosts`` peer ranks, fetched via ``comm.fetch_rows``
+      over the ``remote_backend`` transport: "bulk" | "onesided").
+    ``warmup_freqs``: offline ids_freq_mapping seeding the LFU counters
+      and pre-admitting the top rows (data, not architecture — excluded
+      from equality/hash).
+    ``pipeline_depth``: slot-pool buffers in the double-buffered ring;
+      1 = serialized serving, >= 2 selects the pipelined engine.
+    """
+
+    rows: int = 0
+    rows_per_table: Optional[Tuple[int, ...]] = None
+    policy: str = "lfu"
+    cold_tier: str = "host"
+    remote_hosts: int = 0
+    remote_backend: str = "bulk"
+    pipeline_depth: int = 1
+    warmup_freqs: Optional[object] = dataclasses.field(
+        default=None, compare=False, repr=False)
+
+    def __post_init__(self):
+        if self.pipeline_depth < 1:
+            raise ValueError(
+                f"pipeline_depth must be >= 1, got {self.pipeline_depth}")
+        if self.rows < 0:
+            raise ValueError(f"cache rows must be >= 0, got {self.rows}")
+        if self.rows_per_table is not None and \
+                not isinstance(self.rows_per_table, tuple):
+            # normalize lists/arrays to a tuple so the config stays
+            # hashable (jit static args) and equality is value-based
+            object.__setattr__(
+                self, "rows_per_table",
+                tuple(int(s) for s in np.asarray(self.rows_per_table)))
+
+    @property
+    def enabled(self) -> bool:
+        """True when the tiered cache path should be built at all."""
+        return self.rows > 0 or self.rows_per_table is not None
+
+    def slots_per_table(self, num_tables: int, rows: int) -> np.ndarray:
+        """The per-table LIVE slot counts ``S_t = min(requested, rows)``.
+
+        This is the one definition of the flat pool's geometry: the
+        manager sizes its metadata and the ``(sum S_t, D)`` device pool
+        from it, and the forward's kernel offsets derive from it.
+        """
+        if self.rows_per_table is not None:
+            s = np.asarray(self.rows_per_table, np.int64)
+            if s.shape != (num_tables,):
+                raise ValueError(
+                    f"rows_per_table must have one entry per table "
+                    f"({num_tables}), got shape {s.shape}")
+        else:
+            s = np.full(num_tables, int(self.rows), np.int64)
+        if (s <= 0).any():
+            raise ValueError(
+                f"cache rows must be positive for every table, got "
+                f"{s.tolist()}")
+        return np.minimum(s, rows)
+
+    def slot_offsets(self, num_tables: int, rows: int) -> np.ndarray:
+        """``(T + 1,)`` cumulative slot offsets: table ``t``'s slots live
+        at flat pool rows ``[offsets[t], offsets[t + 1])``."""
+        off = np.zeros(num_tables + 1, np.int64)
+        np.cumsum(self.slots_per_table(num_tables, rows), out=off[1:])
+        return off
+
+
+# ---------------------------------------------------------------------------
+# Deprecated flat-field forwarding (EmbeddingBagConfig / DLRMConfig shims)
+# ---------------------------------------------------------------------------
+
+# old flat field -> CacheConfig field
+ALIAS_FIELDS = {
+    "cache_rows": "rows",
+    "cache_rows_per_table": "rows_per_table",
+    "cache_policy": "policy",
+    "cold_tier": "cold_tier",
+    "remote_hosts": "remote_hosts",
+    "remote_backend": "remote_backend",
+    "pipeline_depth": "pipeline_depth",
+    "warmup_freqs": "warmup_freqs",
+}
+
+
+def resolve_cache_aliases(obj, alias_names) -> CacheConfig:
+    """Merge a config's deprecated flat cache fields into its ``cache``.
+
+    Each alias field explicitly passed (non-None) emits a
+    ``DeprecationWarning`` and overrides the matching ``CacheConfig``
+    field.  The caller must write the returned config back and reset the
+    alias fields to ``None`` (their sentinel), so ``dataclasses.replace``
+    round trips silently — replace() re-passes the stored sentinels, not
+    stale values that would shadow a replaced ``cache``.
+    """
+    base = obj.cache if obj.cache is not None else CacheConfig()
+    overrides = {}
+    for alias in alias_names:
+        value = getattr(obj, alias)
+        if value is None:
+            continue
+        field = ALIAS_FIELDS[alias]
+        warnings.warn(
+            f"{type(obj).__name__}.{alias} is deprecated and will be "
+            f"removed; pass cache=CacheConfig({field}=...) instead "
+            f"(see the README migration table)",
+            DeprecationWarning, stacklevel=3)
+        overrides[field] = value
+    if overrides:
+        base = dataclasses.replace(base, **overrides)
+    return base

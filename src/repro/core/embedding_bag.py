@@ -48,6 +48,7 @@ import jax.numpy as jnp
 from repro.utils.compat import axis_size
 
 from repro.core import comm
+from repro.core.cache_config import CacheConfig, resolve_cache_aliases
 from repro.core.jagged import JaggedBatch
 from repro.kernels import ops as kops
 
@@ -80,35 +81,36 @@ class EmbeddingBagConfig:
     # see pooled_lookup_hot.
     hot_rows: int = 0
     # --- tiered frequency-aware cache (repro/cache/) ---
-    # cache_rows: size S of the per-table HBM slot pool serving hot rows
-    # over a cold tier; 0 disables the cache path.  Unlike the static
-    # hot_rows split, residency is DYNAMIC: an id->slot indirection table
-    # plus LFU/LRU admission-eviction driven by batch frequency counters
-    # — see pooled_lookup_cached / repro.cache.
-    cache_rows: int = 0
-    cache_policy: str = "lfu"        # lfu | lru
-    # cache_rows_per_table: heterogeneous slot vector S_t — one entry per
-    # table, typically a ShardingPlan's per-table Placement.cache_rows
-    # (DLRMConfig.sharding_plan threads it here).  Overrides the uniform
-    # scalar above when set; the pool stays ONE padded (T, max(S_t), D)
-    # rectangle so the fused TBE kernel is unchanged, but capacity checks
-    # and LFU/LRU eviction run against each table's own S_t.
+    # cache: ALL cache-serving knobs in one CacheConfig — slot pool sizing
+    # (uniform rows / per-table rows_per_table), LFU/LRU policy, cold tier
+    # and remote transport, warmup seeding.  Unlike the static hot_rows
+    # split, residency is DYNAMIC: an id->slot indirection table plus
+    # LFU/LRU admission-eviction driven by batch frequency counters — see
+    # pooled_lookup_cached / repro.cache.  Always normalized to a
+    # CacheConfig instance (never None) after construction.
+    cache: Optional[CacheConfig] = None
+    # DEPRECATED flat aliases of the CacheConfig fields above.  Passing
+    # any of them warns DeprecationWarning and forwards the value into
+    # ``cache``; after construction they read as None (their sentinel) —
+    # read cfg.cache.* instead.  Removal noted in the README.
+    cache_rows: Optional[int] = None
+    cache_policy: Optional[str] = None
     cache_rows_per_table: Optional[Tuple[int, ...]] = None
-    # cold_tier: where non-resident rows live (repro/cache/tiers.py).
-    #   "host"   — the serving host's memory (numpy), misses cross the
-    #              host<->device link;
-    #   "remote" — row-split across remote_hosts peer ranks, misses batch
-    #              into one comm.fetch_rows collective per prefetch.
-    cold_tier: str = "host"          # host | remote
-    remote_hosts: int = 0            # 0 = every local device backs a host
-    remote_backend: str = "bulk"     # bulk | onesided (Pallas RDMA fetch)
-    # warmup_freqs: offline ids_freq_mapping — (T, R) or (R,) logged row
-    # frequencies seeding the LFU counters AND pre-admitting each table's
-    # top-cache_rows rows at construction, so serving skips the
-    # cold-start miss burst (CacheEmbedding-style).  Excluded from
-    # equality/hash: it is data, not architecture.
+    cold_tier: Optional[str] = None
+    remote_hosts: Optional[int] = None
+    remote_backend: Optional[str] = None
     warmup_freqs: Optional[object] = dataclasses.field(
         default=None, compare=False, repr=False)
+
+    _CACHE_ALIASES = ("cache_rows", "cache_policy", "cache_rows_per_table",
+                      "cold_tier", "remote_hosts", "remote_backend",
+                      "warmup_freqs")
+
+    def __post_init__(self):
+        cc = resolve_cache_aliases(self, self._CACHE_ALIASES)
+        object.__setattr__(self, "cache", cc)
+        for alias in self._CACHE_ALIASES:
+            object.__setattr__(self, alias, None)
 
     @property
     def table_bytes(self) -> int:
@@ -154,12 +156,32 @@ def table_pspec(cfg: EmbeddingBagConfig, model_axis: str = "model"):
 def pooled_lookup_local(
     tables: jax.Array, batch: JaggedBatch, cfg: EmbeddingBagConfig
 ) -> jax.Array:
-    """(T, R, D) x JaggedBatch -> (B, T, D), no communication.
+    """Tables x JaggedBatch -> (B, T, D), no communication.
+
+    ``tables`` is either the full stacked ``(T, R, D)`` array (ids are
+    row ids), or the tiered cache's FLAT ``(sum S_t, D)`` slot pool (ids
+    are pool-slot ids out of ``CachedEmbeddingBag.prefetch``) — the 2-D
+    case derives the kernel's per-table slot offsets from ``cfg.cache``
+    (the SAME geometry the SlotPoolManager sized the pool with, so the
+    two can never disagree).
 
     All T tables go through ONE table-batched kernel call when
     ``cfg.fused`` (the default); ``fused=False`` restores the per-table
-    vmap baseline.
+    vmap baseline (3-D tables only — a ragged flat pool is always fused).
     """
+    if tables.ndim == 2:
+        offsets = cfg.cache.slot_offsets(
+            cfg.num_tables, cfg.rows_per_table)[:-1]
+        out = kops.embedding_bag_batched_flat(
+            tables,
+            jnp.asarray(offsets, jnp.int32),
+            batch.indices,
+            batch.lengths,
+            batch.weights,
+            combiner=cfg.combiner,
+            mode=cfg.kernel_mode,
+        )                                                    # (T, B, D)
+        return out.transpose(1, 0, 2)
     out = kops.embedding_bag_batched(
         tables,
         batch.indices,
@@ -505,14 +527,16 @@ def pooled_lookup_hot(
 # ---------------------------------------------------------------------------
 
 def make_cache(tables, cfg: EmbeddingBagConfig):
-    """Build the dynamic tiered cache for ``cfg`` (cache_rows > 0).
+    """Build the dynamic tiered cache for ``cfg`` (``cfg.cache.enabled``).
 
     The returned :class:`repro.cache.CachedEmbeddingBag` serves lookups
-    from an HBM slot pool of ``cfg.cache_rows`` rows per table over the
-    cold tier named by ``cfg.cold_tier`` — the full ``tables`` in local
-    host memory, or row-shards on ``cfg.remote_hosts`` peer ranks fetched
-    through ``comm.fetch_rows`` — the dynamic successor of the static
-    ``hot_rows`` replica split above.
+    from a flat HBM slot pool sized by ``cfg.cache`` (uniform ``rows`` or
+    heterogeneous ``rows_per_table``) over the cold tier it names — the
+    full ``tables`` in local host memory, or row-shards on
+    ``cache.remote_hosts`` peer ranks fetched through ``comm.fetch_rows``
+    — the dynamic successor of the static ``hot_rows`` replica split
+    above.  All cache knobs travel inside the one ``CacheConfig``; no
+    per-knob kwarg plumbing.
     """
     from repro.cache import CachedEmbeddingBag   # deferred: cache -> core
 

@@ -202,6 +202,31 @@ def local_vs_distributed_speedup(
 # Tiered-cache projections (repro/cache/ — hit-rate-parameterized phases)
 # ---------------------------------------------------------------------------
 
+def slot_pool_bytes(slots_per_table, dim: int, dtype_bytes: int = 4) -> int:
+    """Exact HBM the FLAT heterogeneous slot pool allocates:
+    ``sum(S_t) * dim * dtype_bytes``.
+
+    This is the quantity the planner's HBM budget must charge — the flat
+    ``(sum S_t, D)`` pool holds no padding, so priced bytes == allocated
+    bytes == ``SlotPool.live_nbytes``."""
+    s = np.asarray(slots_per_table, np.int64)
+    if s.size and s.min() < 0:
+        raise ValueError(f"slot counts must be >= 0, got {s.tolist()}")
+    return int(s.sum()) * int(dim) * int(dtype_bytes)
+
+
+def padded_slot_pool_bytes(slots_per_table, dim: int,
+                           dtype_bytes: int = 4) -> int:
+    """HBM a RECTANGULAR ``(T, max S_t, D)`` pool would allocate for the
+    same per-table slot counts — the pre-flat layout's cost, kept as the
+    baseline the benchmarks quantify the flat pool's shrink against."""
+    s = np.asarray(slots_per_table, np.int64)
+    if s.size == 0:
+        return 0
+    if s.min() < 0:
+        raise ValueError(f"slot counts must be >= 0, got {s.tolist()}")
+    return int(s.size) * int(s.max()) * int(dim) * int(dtype_bytes)
+
 @functools.lru_cache(maxsize=None)
 def _gen_harmonic(n: float, a: float) -> float:
     """H(n, a) = sum_{k=1..n} k^-a (exact head + integral tail).

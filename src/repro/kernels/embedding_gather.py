@@ -11,17 +11,23 @@ CUDA gather; the TPU-native formulation is *scalar-prefetch driven DMA*:
   - the kernel body accumulates ``w[b, l] * row`` into the f32 output
     block in VREGs.
 
-Two kernels:
+Three kernels:
 
 ``gather_pool_pallas`` — single table. Grid ``(B, num_D_blocks, L)``; the
 L axis is innermost ("arbitrary" semantics) so all visits to an output
 block ``(b, d)`` are consecutive and accumulation is legal; B and D blocks
 are parallel.
 
-``gather_pool_tbe_pallas`` — TABLE-BATCHED (TBE, FBGEMM-style): executes
-the lookups of ALL ``T`` stacked tables in ONE ``pallas_call``. The paper
-sweeps #tables (§5) and per-table launches pay T separate grid setups and
-pipeline drains; fusing removes them. Design:
+``gather_pool_tbe_flat_pallas`` — TABLE-BATCHED (TBE, FBGEMM-style) over a
+FLAT heterogeneous row space: executes the lookups of ALL ``T`` tables in
+ONE ``pallas_call``, with ragged per-table row counts described only by a
+scalar-prefetched ``(T,)`` ``row_offsets`` vector. This is the kernel the
+tiered cache's flat ``(sum S_t, D)`` slot pool runs on. The paper sweeps
+#tables (§5) and per-table launches pay T separate grid setups and
+pipeline drains; fusing removes them.
+
+``gather_pool_tbe_pallas`` — the uniform-rows ``(T, R, D)`` wrapper:
+delegates to the flat kernel with ``row_offsets[t] = t * R``. Design:
 
   * Flattened row space — the stacked ``(T, R, D)`` tables are viewed as
     one ``(T*R, D)`` array; table ``t``'s rows live at ``[t*R, (t+1)*R)``.
@@ -141,35 +147,42 @@ def _tbe_kernel(off_ref, idx_ref, w_ref, table_blk, out_blk, *, L: int):
 
 
 @functools.partial(jax.jit, static_argnames=("interpret", "d_block"))
-def gather_pool_tbe_pallas(
-    tables: jax.Array,    # (T, R, D) stacked tables
-    indices: jax.Array,   # (T, B, L) int32 TABLE-LOCAL ids — in [0, R)
-    weights: jax.Array,   # (T, B, L) f32 — 0 for masked/padded slots
+def gather_pool_tbe_flat_pallas(
+    flat_tables: jax.Array,   # (N, D) concatenated per-table row blocks
+    row_offsets: jax.Array,   # (T,) int32 — start of table t's rows in N
+    indices: jax.Array,       # (T, B, L) int32 TABLE-LOCAL ids
+    weights: jax.Array,       # (T, B, L) f32 — 0 for masked/padded slots
     *,
     interpret: bool = False,
     d_block: int | None = None,
 ) -> jax.Array:
-    """Fused pooled lookup over all tables, ONE ``pallas_call``.
+    """Fused pooled lookup over a FLAT heterogeneous row space.
 
-    ``out[t, b] = sum_l weights[t,b,l] * tables[t, indices[t,b,l]]``
+    ``out[t, b] = sum_l weights[t,b,l] * flat_tables[row_offsets[t] +
+    indices[t,b,l]]`` — the fully general form of the TBE kernel: tables
+    (or slot pools) may have RAGGED per-table row counts, described only
+    by the scalar-prefetched ``row_offsets`` vector. This is what the
+    tiered cache's ``(sum S_t, D)`` slot pool addresses with
+    ``row_offsets = cumsum(S_t)[:-1]``; the uniform ``(T, R, D)`` case is
+    ``row_offsets[t] = t * R`` (see :func:`gather_pool_tbe_pallas`).
 
     Returns (T, B, D) f32 (accumulation dtype; callers cast). See the
-    module docstring for the flattened-row-space / offset / grid design.
+    module docstring for the offset / grid design.
     """
-    T, R, D = tables.shape
-    Ti, B, L = indices.shape
-    if Ti != T:
-        raise ValueError(f"tables T={T} != indices T={Ti}")
+    N, D = flat_tables.shape
+    T, B, L = indices.shape
+    if row_offsets.shape != (T,):
+        raise ValueError(
+            f"row_offsets must be (T,)=({T},), got {row_offsets.shape}")
     Db = d_block or _pick_d_block(D)
     if D % Db != 0:
         raise ValueError(f"D={D} not divisible by d_block={Db}")
     nD = D // Db
     TB = T * B
 
-    flat_tables = tables.reshape(T * R, D)
     flat_idx = indices.reshape(TB, L)
     flat_w = weights.reshape(TB, L).astype(jnp.float32)
-    row_offsets = jnp.arange(T, dtype=jnp.int32) * R
+    row_offsets = row_offsets.astype(jnp.int32)
 
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=2,   # row_offsets (T,), flat_idx (T*B, L)
@@ -196,3 +209,33 @@ def gather_pool_tbe_pallas(
         interpret=interpret,
     )(row_offsets, flat_idx, flat_w, flat_tables)
     return out.reshape(T, B, D)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret", "d_block"))
+def gather_pool_tbe_pallas(
+    tables: jax.Array,    # (T, R, D) stacked tables
+    indices: jax.Array,   # (T, B, L) int32 TABLE-LOCAL ids — in [0, R)
+    weights: jax.Array,   # (T, B, L) f32 — 0 for masked/padded slots
+    *,
+    interpret: bool = False,
+    d_block: int | None = None,
+) -> jax.Array:
+    """Fused pooled lookup over all tables, ONE ``pallas_call``.
+
+    ``out[t, b] = sum_l weights[t,b,l] * tables[t, indices[t,b,l]]``
+
+    The uniform-rows special case of :func:`gather_pool_tbe_flat_pallas`:
+    the stacked ``(T, R, D)`` tables are one ``(T*R, D)`` flat row space
+    with ``row_offsets[t] = t * R``.
+
+    Returns (T, B, D) f32 (accumulation dtype; callers cast). See the
+    module docstring for the flattened-row-space / offset / grid design.
+    """
+    T, R, D = tables.shape
+    Ti = indices.shape[0]
+    if Ti != T:
+        raise ValueError(f"tables T={T} != indices T={Ti}")
+    return gather_pool_tbe_flat_pallas(
+        tables.reshape(T * R, D),
+        jnp.arange(T, dtype=jnp.int32) * R,
+        indices, weights, interpret=interpret, d_block=d_block)

@@ -33,6 +33,7 @@ import jax.numpy as jnp
 from repro.kernels import ref as _ref
 from repro.kernels.embedding_gather import (
     gather_pool_pallas,
+    gather_pool_tbe_flat_pallas,
     gather_pool_tbe_pallas,
 )
 
@@ -125,6 +126,39 @@ def _tbe_bwd(interpret, res, g):
 
 
 _pooled_lookup_tbe.defvjp(_tbe_fwd, _tbe_bwd)
+
+
+# --- differentiable fused FLAT (heterogeneous row space) path ----------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def _pooled_lookup_tbe_flat(flat_tables, row_offsets, indices, eff_w,
+                            interpret):
+    return gather_pool_tbe_flat_pallas(
+        flat_tables, row_offsets, indices, eff_w, interpret=interpret)
+
+
+def _tbe_flat_fwd(flat_tables, row_offsets, indices, eff_w, interpret):
+    out = gather_pool_tbe_flat_pallas(
+        flat_tables, row_offsets, indices, eff_w, interpret=interpret)
+    return out, (flat_tables, row_offsets, indices, eff_w)
+
+
+def _tbe_flat_bwd(interpret, res, g):
+    flat_tables, row_offsets, indices, eff_w = res
+    N, D = flat_tables.shape
+    # scatter-add into the ragged flat (N, D) row space — the transpose of
+    # the kernel's offset-adjusted gather
+    offs = row_offsets.astype(indices.dtype)[:, None, None]
+    flat_idx = (indices + offs).reshape(-1)
+    contrib = (eff_w[..., None] * g[:, :, None, :]).reshape(-1, D)
+    d_flat = jax.ops.segment_sum(contrib, flat_idx, num_segments=N)
+    # d eff_w[t,b,l] = <flat_tables[off[t] + idx[t,b,l]], g[t,b]>
+    rows = flat_tables[flat_idx].reshape(*indices.shape, D)
+    d_w = jnp.einsum("tbld,tbd->tbl", rows.astype(jnp.float32), g)
+    return d_flat.astype(flat_tables.dtype), None, None, d_w
+
+
+_pooled_lookup_tbe_flat.defvjp(_tbe_flat_fwd, _tbe_flat_bwd)
 
 
 def _pooled_lookup_per_table(tables, indices, eff_w, interpret):
@@ -223,6 +257,45 @@ def embedding_bag_batched(
     elif combiner != "sum":
         raise ValueError(f"unknown combiner {combiner!r}")
     return out.astype(tables.dtype)
+
+
+def embedding_bag_batched_flat(
+    flat_tables: jax.Array,    # (N, D) concatenated per-table row blocks
+    row_offsets: jax.Array,    # (T,) int32 — start of table t's rows in N
+    indices: jax.Array,        # (T, B, L) table-local ids, in [0, S_t)
+    lengths: Optional[jax.Array] = None,   # (T, B)
+    weights: Optional[jax.Array] = None,   # (T, B, L)
+    *,
+    combiner: str = "sum",
+    mode: str = "auto",
+) -> jax.Array:
+    """Pooled lookup over a FLAT heterogeneous row space -> (T, B, D).
+
+    ``out[t, b] = pool_l flat_tables[row_offsets[t] + indices[t, b, l]]``
+
+    The entry point the tiered cache's ``(sum S_t, D)`` slot pool is
+    served from: per-table row counts are ragged, described only by the
+    scalar-prefetched ``row_offsets`` vector. Always ONE fused TBE
+    ``pallas_call`` — there is no per-table unfused fallback, because a
+    ragged pool has no ``(T, S, D)`` rectangle to vmap over.
+    """
+    mode = _resolve_mode(mode)
+    if mode == "reference":
+        return _ref.embedding_bag_batched_flat_ref(
+            flat_tables, row_offsets, indices, lengths, weights,
+            combiner=combiner
+        )
+    if mode not in ("pallas", "interpret"):
+        raise ValueError(f"unknown mode {mode!r}")
+    eff_w = _effective_weights(indices, lengths, weights)
+    out = _pooled_lookup_tbe_flat(
+        flat_tables, row_offsets, indices, eff_w, mode == "interpret")
+    if combiner == "mean":
+        denom = jnp.maximum(eff_w.sum(axis=2, keepdims=True), 1.0)
+        out = out / denom
+    elif combiner != "sum":
+        raise ValueError(f"unknown combiner {combiner!r}")
+    return out.astype(flat_tables.dtype)
 
 
 def embedding_bag_rw_partial_batched(

@@ -12,6 +12,31 @@ import jax
 import jax.numpy as jnp
 
 
+def _pool_rows(rows, lengths, weights, combiner, out_dtype) -> jax.Array:
+    """The shared pooling tail: mask, weighted-sum einsum, combiner, cast.
+
+    ONE definition on purpose — the stacked ``(T, R, D)`` oracle and the
+    flat ``(N, D)`` oracle (the tiered cache's slot-pool layout) must run
+    the numerically IDENTICAL pooling program so cached lookups stay
+    bitwise-equal to the uncached oracle.
+    """
+    B, L = rows.shape[0], rows.shape[1]
+    if lengths is None:
+        mask = jnp.ones((B, L), dtype=jnp.float32)
+    else:
+        mask = (jnp.arange(L)[None, :] < lengths[:, None]).astype(jnp.float32)
+    w = mask if weights is None else mask * weights.astype(jnp.float32)
+    out = jnp.einsum(
+        "bld,bl->bd", rows.astype(jnp.float32), w, precision=jax.lax.Precision.HIGHEST
+    )
+    if combiner == "mean":
+        denom = jnp.maximum(w.sum(axis=1, keepdims=True), 1.0)
+        out = out / denom
+    elif combiner != "sum":
+        raise ValueError(f"unknown combiner {combiner!r}")
+    return out.astype(out_dtype)
+
+
 def embedding_bag_ref(
     table: jax.Array,          # (R, D) embedding table (or shard)
     indices: jax.Array,        # (B, L) int32 row ids
@@ -26,22 +51,8 @@ def embedding_bag_ref(
     or "mean" (mean divides by lengths, guarding 0).
     Returns (B, D) in the table dtype's accumulation type (f32 accum).
     """
-    B, L = indices.shape
     rows = table[indices]                                    # (B, L, D)
-    if lengths is None:
-        mask = jnp.ones((B, L), dtype=jnp.float32)
-    else:
-        mask = (jnp.arange(L)[None, :] < lengths[:, None]).astype(jnp.float32)
-    w = mask if weights is None else mask * weights.astype(jnp.float32)
-    out = jnp.einsum(
-        "bld,bl->bd", rows.astype(jnp.float32), w, precision=jax.lax.Precision.HIGHEST
-    )
-    if combiner == "mean":
-        denom = jnp.maximum(w.sum(axis=1, keepdims=True), 1.0)
-        out = out / denom
-    elif combiner != "sum":
-        raise ValueError(f"unknown combiner {combiner!r}")
-    return out.astype(table.dtype)
+    return _pool_rows(rows, lengths, weights, combiner, table.dtype)
 
 
 def embedding_bag_masked_ref(
@@ -95,6 +106,36 @@ def embedding_bag_batched_ref(
         return jax.vmap(fn)(tables, indices, lens)
     fn = lambda t, i, ln, w: embedding_bag_ref(t, i, ln, w, combiner=combiner)
     return jax.vmap(fn)(tables, indices, lens, weights)
+
+
+def embedding_bag_batched_flat_ref(
+    flat_tables: jax.Array,    # (N, D) concatenated per-table row blocks
+    row_offsets: jax.Array,    # (T,) start of table t's rows in N
+    indices: jax.Array,        # (T, B, L) table-local row ids
+    lengths: Optional[jax.Array] = None,   # (T, B)
+    weights: Optional[jax.Array] = None,   # (T, B, L)
+    *,
+    combiner: str = "sum",
+) -> jax.Array:
+    """Table-batched oracle over a FLAT heterogeneous row space.
+
+    Table ``t``'s rows live at ``flat_tables[row_offsets[t] :]`` — ragged
+    per-table row counts, the layout of the tiered cache's ``(sum S_t, D)``
+    slot pool. Runs the same vmapped gather + :func:`_pool_rows` program
+    as :func:`embedding_bag_batched_ref`, so equal row payloads pool to
+    bitwise-equal (T, B, D) outputs.
+    """
+    T, B, L = indices.shape
+    lens = lengths if lengths is not None else jnp.full((T, B), L, jnp.int32)
+
+    def fn(off, i, ln, w):
+        rows = flat_tables[off + i]                          # (B, L, D)
+        return _pool_rows(rows, ln, w, combiner, flat_tables.dtype)
+
+    if weights is None:
+        return jax.vmap(lambda off, i, ln: fn(off, i, ln, None))(
+            row_offsets, indices, lens)
+    return jax.vmap(fn)(row_offsets, indices, lens, weights)
 
 
 def embedding_bag_masked_batched_ref(

@@ -279,26 +279,29 @@ def _mem_dict(mem) -> dict:
 
 def run_dlrm_cell(cache_rows: int = 0, cold_tier: str = "host",
                   out_dir: str = None, batch: int = 256) -> dict:
-    """DLRM serving cell, routed ENTIRELY through DLRMConfig tier fields.
+    """DLRM serving cell, routed ENTIRELY through ``DLRMConfig.cache``.
 
     ``cache_rows == 0``: lower + compile the distributed forward (the
     paper's RW pipeline) on the production mesh and record its collective
     traffic.  ``cache_rows > 0``: lower the TIERED serving program — the
-    jitted forward over the (T, S, D) slot pool the engine scores with
-    (cold tables off-HBM per ``cold_tier``) — and record that its HLO
-    contains NO collectives and only pool-sized table memory: the whole
-    trade the tiered store makes, as compile-time evidence.
+    jitted forward over the flat (sum S_t, D) slot pool the engine
+    scores with (cold tables off-HBM per ``cold_tier``) — and record
+    that its HLO contains NO collectives and only pool-sized table
+    memory: the whole trade the tiered store makes, as compile-time
+    evidence.
     """
     import dataclasses as _dc
 
+    from repro.cache import CacheConfig
     from repro.configs import dlrm as dlrm_cfg_mod
     from repro.core.jagged import JaggedBatch
     from repro.models import dlrm as dlrm_mod
 
     out_dir = out_dir or ART_DIR
     os.makedirs(out_dir, exist_ok=True)
-    cfg = _dc.replace(dlrm_cfg_mod.smoke(), cache_rows=cache_rows,
-                      cold_tier=cold_tier)
+    cfg = _dc.replace(dlrm_cfg_mod.smoke(),
+                      cache=CacheConfig(rows=cache_rows,
+                                        cold_tier=cold_tier))
     ecfg = cfg.embedding_config()
     tag = (f"dlrm__{'tiered' if cache_rows else 'rw'}"
            f"__{cold_tier if cache_rows else 'dist'}")
@@ -309,9 +312,9 @@ def run_dlrm_cell(cache_rows: int = 0, cold_tier: str = "host",
     params_t = jax.eval_shape(
         lambda: dlrm_mod.init_params(jax.random.key(0), cfg))
     if cache_rows:
-        # the engine's serving program: tables are the slot pool
+        # the engine's serving program: tables are the FLAT slot pool
         params_t = {**params_t,
-                    "tables": jax.ShapeDtypeStruct((T, cache_rows, D),
+                    "tables": jax.ShapeDtypeStruct((T * cache_rows, D),
                                                    jnp.float32)}
     dense_t = jax.ShapeDtypeStruct((batch, cfg.num_dense_features),
                                    jnp.float32)

@@ -3,8 +3,8 @@
 The serialized tiered engine admits a micro-batch into ONE slot pool and
 then reads that same pool, so cold fetch -> pool scatter -> forward is a
 chain.  This module breaks the chain by epoch-partitioning the slot
-space into ``depth`` independent buffers (each a full ``(T, S, D)``
-:class:`~repro.cache.SlotPool` with its own
+space into ``depth`` independent buffers (each a full flat
+``(sum S_t, D)`` :class:`~repro.cache.SlotPool` with its own
 :class:`~repro.cache.SlotPoolManager` metadata), rotating over one
 SHARED cold tier and one SHARED :class:`~repro.cache.CacheStats`:
 
@@ -33,11 +33,11 @@ is always fully resident in ITS buffer before its forward runs, and the
 pooled output is bitwise-invariant to slot layout.
 
 Heterogeneous pools (the planner -> engine round trip) compose freely:
-``cfg.cache_rows_per_table`` sizes every buffer's per-table ``S_t``
-identically — each buffer is a full padded ``(T, max(S_t), D)`` pool
-with its own per-table capacity/eviction metadata, and the shared
-``CacheStats`` accumulates the per-table hit/miss/eviction splits from
-every buffer's plans (``stats_kwargs`` carries them on both paths).
+``cfg.cache.rows_per_table`` sizes every buffer's per-table ``S_t``
+identically — each buffer is a full flat ``(sum S_t, D)`` pool with its
+own per-table capacity/eviction metadata, and the shared ``CacheStats``
+accumulates the per-table hit/miss/eviction splits from every buffer's
+plans (``stats_kwargs`` carries them on both paths).
 
 The facade methods (``prefetch_arrays`` / ``pool`` / ``stats``) make
 this class a drop-in for :class:`~repro.cache.CachedEmbeddingBag` in
@@ -67,7 +67,7 @@ class DoubleBufferedSlotPool:
         self.stats = first.stats
         # later buffers share the first's cold store (one set of host
         # tables / remote shards) and its stats record; each keeps its
-        # own manager + pool.  cfg.warmup_freqs seeds EVERY buffer so
+        # own manager + pool.  cfg.cache.warmup_freqs seeds EVERY buffer so
         # the first `depth` flushes all skip the cold-start burst (the
         # warmup fetch traffic is counted once per buffer).
         self.buffers = [first] + [
@@ -161,7 +161,7 @@ class DoubleBufferedSlotPool:
                 f"or the plan was committed twice")
         if rows is not None:
             try:
-                bag.hot.scatter(plan.flat_addr(bag.mgr.S), rows)
+                bag.hot.scatter(plan.flat_addr(bag.mgr.slot_offsets), rows)
             except BaseException:
                 bag.mgr.invalidate_fetch(plan)
                 raise
@@ -171,7 +171,8 @@ class DoubleBufferedSlotPool:
 
     @property
     def pool(self) -> jax.Array:
-        """The LIVE buffer's ``(T, S, D)`` device pool (kernel operand)."""
+        """The LIVE buffer's flat ``(sum S_t, D)`` device pool (kernel
+        operand)."""
         return self.live.pool
 
     def prefetch_arrays(self, indices: np.ndarray,

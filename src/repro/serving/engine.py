@@ -12,8 +12,8 @@ DLRM serving: ``DLRMEngine`` micro-batches CTR scoring requests into one
 fixed-shape jitted forward whose embedding pooling runs the fused
 table-batched (TBE) kernel — one ``pallas_call`` per batch for all 26
 Criteo-like tables instead of 26 launches (the paper's #tables axis).
-``PipelinedDLRMEngine`` (selected by ``DLRMConfig.pipeline_depth >= 2``
-via :func:`make_dlrm_engine`) runs the same scoring as a software
+``PipelinedDLRMEngine`` (selected by ``DLRMConfig.cache.pipeline_depth
+>= 2`` via :func:`make_dlrm_engine`) runs the same scoring as a software
 pipeline over double-buffered slot pools (repro/pipeline/): batch k+1's
 cold fetch and admission scatter target the shadow buffer while batch
 k's forward reads the live one — bitwise-identical scores, overlapped
@@ -207,21 +207,22 @@ class DLRMEngine:
     costs a single gather kernel launch regardless of the table count.
     Fixed shapes mean the forward compiles exactly once.
 
-    With ``cfg.cache_rows > 0`` the tables live behind a tiered cache
-    (repro/cache/): ``flush`` PREFETCHES the micro-batch's working set
-    into the HBM slot pool, remaps ids to slots, and runs the same
-    jitted forward over the pool — the pool is a same-shape argument
-    every flush, so admission/eviction never recompiles.  The cold tier
-    is ``cfg.cold_tier``: the serving host's memory, or row-shards on
-    ``cfg.remote_hosts`` peer ranks fetched cross-host at flush
-    (``comm.fetch_rows``); ``cfg.warmup_freqs`` pre-admits the logged-hot
-    rows so the first flushes skip the cold-start miss burst.
+    With ``cfg.cache.enabled`` (``cache.rows > 0`` or a per-table
+    vector) the tables live behind a tiered cache (repro/cache/):
+    ``flush`` PREFETCHES the micro-batch's working set into the flat HBM
+    slot pool, remaps ids to TABLE-LOCAL slots, and runs the same jitted
+    forward over the pool — the pool is a same-shape argument every
+    flush, so admission/eviction never recompiles.  The cold tier is
+    ``cfg.cache.cold_tier``: the serving host's memory, or row-shards on
+    ``cfg.cache.remote_hosts`` peer ranks fetched cross-host at flush
+    (``comm.fetch_rows``); ``cfg.cache.warmup_freqs`` pre-admits the
+    logged-hot rows so the first flushes skip the cold-start miss burst.
 
     ``cfg.sharding_plan`` closes the planner -> engine round trip: each
     "cached" ``Placement.cache_rows`` sizes THAT table's slot pool
-    (heterogeneous ``S_t`` in one padded pool — tables mapped by
-    position, never by name), and the per-table measured hit rate
-    (``cache_stats().hit_rate_t``) is directly comparable against the
+    (heterogeneous ``S_t`` segments of ONE flat ``(sum S_t, D)`` pool —
+    tables mapped by position, never by name), and the per-table measured
+    hit rate (``cache_stats().hit_rate_t``) is directly comparable against the
     plan's priced ``est_hit_rate`` — see
     benchmarks/plan_roundtrip_sweep.py.
     """
@@ -233,13 +234,14 @@ class DLRMEngine:
         self.queue: List[CTRRequest] = []
 
         self.cache = None
-        if cfg.cache_rows > 0 or cfg.sharding_plan is not None:
+        if cfg.cache.enabled or cfg.sharding_plan is not None:
             if ctx is not None:
                 raise NotImplementedError(
                     "DLRMEngine: the tiered cache path scores on a single "
-                    "serving device (cache_rows > 0 with a ParallelContext "
-                    "is not supported) — a cluster-wide COLD tier is "
-                    "cfg.cold_tier='remote', which manages its own mesh")
+                    "serving device (an enabled cfg.cache with a "
+                    "ParallelContext is not supported) — a cluster-wide "
+                    "COLD tier is cache.cold_tier='remote', which manages "
+                    "its own mesh")
             per_table = cfg.cache_rows_vector()
             if per_table is not None:
                 # plan-driven heterogeneous pools: EVERY table's own S_t
@@ -251,11 +253,12 @@ class DLRMEngine:
                         f"sharding_plan slot pools {small} are smaller "
                         f"than pooling ({cfg.pooling}) — every table's "
                         f"cache_rows must fit one request's working set")
-            elif cfg.cache_rows < cfg.pooling:
+            elif cfg.cache.rows < cfg.pooling:
                 raise ValueError(
-                    f"cache_rows ({cfg.cache_rows}) must be >= pooling "
+                    f"cache rows ({cfg.cache.rows}) must be >= pooling "
                     f"({cfg.pooling}) so a single request's working set "
-                    f"always fits the slot pool")
+                    f"always fits the slot pool (CacheConfig.rows, "
+                    f"formerly cache_rows)")
             self.cache = self._make_cache(params["tables"],
                                           cfg.embedding_config())
             # the cold tier now lives host-side inside the cache; drop the
@@ -373,7 +376,7 @@ class DLRMEngine:
         return {req.rid: float(p[i]) for i, req in enumerate(todo)}
 
     def cache_stats(self):
-        """The tiered cache's CacheStats (None when cache_rows == 0).
+        """The tiered cache's CacheStats (None when the cache is off).
 
         Miss traffic is split by source tier: ``bytes_h2d`` /
         ``misses_host`` for rows the serving host owns, ``bytes_remote``
@@ -415,17 +418,17 @@ class PipelinedDLRMEngine(DLRMEngine):
 
     def __init__(self, params, cfg: DLRMConfig, batch_size: int,
                  ctx: Optional[ParallelContext] = None):
-        if cfg.pipeline_depth < 2:
+        if cfg.cache.pipeline_depth < 2:
             raise ValueError(
                 f"PipelinedDLRMEngine needs pipeline_depth >= 2 (got "
-                f"{cfg.pipeline_depth}); depth 1 is the serialized "
+                f"{cfg.cache.pipeline_depth}); depth 1 is the serialized "
                 f"DLRMEngine — use make_dlrm_engine to pick by config")
-        if cfg.cache_rows <= 0 and cfg.sharding_plan is None:
+        if not cfg.cache.enabled and cfg.sharding_plan is None:
             raise ValueError(
-                "PipelinedDLRMEngine requires the tiered cache "
-                "(cfg.cache_rows > 0 or a cfg.sharding_plan): with fully "
-                "device-resident tables there is no prefetch stage to "
-                "overlap")
+                "PipelinedDLRMEngine requires the tiered cache (an enabled "
+                "cfg.cache — CacheConfig.rows > 0, formerly cache_rows — "
+                "or a cfg.sharding_plan): with fully device-resident "
+                "tables there is no prefetch stage to overlap")
         from repro.pipeline import PipelineScheduler, PipelineTrace
 
         super().__init__(params, cfg, batch_size, ctx)
@@ -439,7 +442,7 @@ class PipelinedDLRMEngine(DLRMEngine):
         from repro.pipeline import DoubleBufferedSlotPool
 
         return DoubleBufferedSlotPool(tables, ebcfg,
-                                      depth=self.cfg.pipeline_depth)
+                                      depth=self.cfg.cache.pipeline_depth)
 
     # -- scheduler hooks -----------------------------------------------------
 
@@ -509,8 +512,8 @@ class PipelinedDLRMEngine(DLRMEngine):
 
 def make_dlrm_engine(params, cfg: DLRMConfig, batch_size: int,
                      ctx: Optional[ParallelContext] = None) -> DLRMEngine:
-    """Build the engine ``cfg.pipeline_depth`` selects: 1 = serialized
-    :class:`DLRMEngine`, >= 2 = :class:`PipelinedDLRMEngine` over a
-    ``pipeline_depth``-deep double-buffered slot-pool ring."""
-    cls = PipelinedDLRMEngine if cfg.pipeline_depth > 1 else DLRMEngine
+    """Build the engine ``cfg.cache.pipeline_depth`` selects: 1 =
+    serialized :class:`DLRMEngine`, >= 2 = :class:`PipelinedDLRMEngine`
+    over a ``pipeline_depth``-deep double-buffered slot-pool ring."""
+    cls = PipelinedDLRMEngine if cfg.cache.pipeline_depth > 1 else DLRMEngine
     return cls(params, cfg, batch_size, ctx)

@@ -19,6 +19,7 @@ import sys
 import numpy as np
 import jax
 
+from repro.cache import CacheConfig
 from repro.configs import dlrm as dlrm_cfg
 from repro.models import dlrm as dlrm_mod
 from repro.pipeline import STAGES, DoubleBufferedSlotPool
@@ -63,13 +64,16 @@ def _requests(cfg, n, rng):
 def pipelined_remote_bitwise_vs_depth1():
     """>= 3 flushes of churning zipf traffic over the remote cold tier:
     pipelined scores == serialized scores, BITWISE."""
-    base = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference",
-                               cache_rows=16, cache_policy="lru",
-                               cold_tier="remote")
+    base = dataclasses.replace(
+        dlrm_cfg.smoke(), kernel_mode="reference",
+        cache=CacheConfig(rows=16, policy="lru", cold_tier="remote"))
     params = dlrm_mod.init_params(jax.random.key(0), base)
     serial = make_dlrm_engine(params, base, batch_size=3)
     piped = make_dlrm_engine(
-        params, dataclasses.replace(base, pipeline_depth=2), batch_size=3)
+        params,
+        dataclasses.replace(
+            base, cache=dataclasses.replace(base.cache, pipeline_depth=2)),
+        batch_size=3)
     assert type(serial) is DLRMEngine
     assert isinstance(piped, PipelinedDLRMEngine)
     assert isinstance(piped.cache, DoubleBufferedSlotPool)
@@ -103,14 +107,18 @@ def pipelined_fallback_remote_no_deadlock():
     """A micro-batch whose union working set overflows the shadow buffer
     must fall back to the serialized split flush — over the remote tier
     too — and still score everything, equal to the depth-1 engine."""
-    base = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference",
-                               cold_tier="remote")
+    base = dlrm_cfg.smoke()
     L = base.pooling
+    base = dataclasses.replace(base, kernel_mode="reference")
     params = dlrm_mod.init_params(jax.random.key(2), base)
-    cfg1 = dataclasses.replace(base, cache_rows=L)
+    cfg1 = dataclasses.replace(
+        base, cache=CacheConfig(rows=L, cold_tier="remote"))
     serial = make_dlrm_engine(params, cfg1, batch_size=2)
     piped = make_dlrm_engine(
-        params, dataclasses.replace(cfg1, pipeline_depth=2), batch_size=2)
+        params,
+        dataclasses.replace(
+            cfg1, cache=dataclasses.replace(cfg1.cache, pipeline_depth=2)),
+        batch_size=2)
     T, F = base.num_sparse_features, base.num_dense_features
     rng = np.random.default_rng(3)
     # disjoint full-length working sets: any 2-request union overflows

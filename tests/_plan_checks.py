@@ -11,9 +11,9 @@ scores must stay BITWISE equal to the uncached direct forward under
 per-table eviction churn — serialized AND pipelined
 (``pipeline_depth=2``, double-buffered heterogeneous pools).  Also
 checks the bag-level contract directly: per-table capacities isolate
-(only the overflowing table raises), padding slots beyond a table's own
-S_t are never allocated in any buffer, and the per-table stats splits
-sum to the totals.
+(only the overflowing table raises), every buffer's flat pool holds
+exactly sum(S_t) slots with table-local ids, and the per-table stats
+splits sum to the totals.
 """
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=4"
@@ -24,7 +24,7 @@ import numpy as np
 import jax
 import jax.numpy as jnp
 
-from repro.cache import CachedEmbeddingBag, RemoteStore
+from repro.cache import CacheConfig, CachedEmbeddingBag, RemoteStore
 from repro.configs import dlrm as dlrm_cfg
 from repro.core.embedding_bag import (
     EmbeddingBagConfig, init_tables, pooled_lookup_local,
@@ -84,11 +84,11 @@ def _requests(cfg, n, rng):
 
 
 def _assert_per_table_invariants(mgr):
-    """Dead padding never allocated; live slots within each table's S_t."""
+    """Flat pool: each table owns exactly S_t slots, ids table-local."""
+    assert mgr.id_of_slot.shape == (int(mgr.slots_per_table.sum()),)
     for t in range(mgr.T):
         st = mgr.slots_per_table[t]
-        assert (mgr.id_of_slot[t, st:] == -2).all(), \
-            f"table {t}: padding slot allocated"
+        assert mgr.id_of_slot_t(t).size == st
         assert mgr.slot_of_id[t].max() < st
 
 
@@ -96,14 +96,18 @@ def plan_driven_remote_bitwise_serialized_and_pipelined():
     """The acceptance check: a plan-emitted heterogeneous plan serves
     through make_dlrm_engine over the remote cold tier, bitwise-equal to
     the uncached oracle, serialized AND at pipeline_depth=2."""
-    base = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference",
-                               cold_tier="remote", cache_policy="lru")
+    base = dataclasses.replace(
+        dlrm_cfg.smoke(), kernel_mode="reference",
+        cache=CacheConfig(cold_tier="remote", policy="lru"))
     p = _smoke_plan(base)
     cfg = dataclasses.replace(base, sharding_plan=p)
     params = dlrm_mod.init_params(jax.random.key(0), base)
     serial = make_dlrm_engine(params, cfg, batch_size=3)
     piped = make_dlrm_engine(
-        params, dataclasses.replace(cfg, pipeline_depth=2), batch_size=3)
+        params,
+        dataclasses.replace(
+            cfg, cache=dataclasses.replace(cfg.cache, pipeline_depth=2)),
+        batch_size=3)
     assert type(serial) is DLRMEngine
     assert isinstance(piped, PipelinedDLRMEngine)
     assert isinstance(piped.cache, DoubleBufferedSlotPool)
@@ -154,12 +158,13 @@ def per_table_pools_remote_churn_bitwise():
     whose own S_t overflows raises)."""
     cfg = EmbeddingBagConfig(num_tables=2, rows_per_table=256, dim=8,
                              kernel_mode="reference",
-                             cache_rows_per_table=(32, 8),
-                             cold_tier="remote", cache_policy="lru")
+                             cache=CacheConfig(rows_per_table=(32, 8),
+                                               cold_tier="remote",
+                                               policy="lru"))
     tables = init_tables(jax.random.key(2), cfg)
     bag = CachedEmbeddingBag(tables, cfg)
     assert isinstance(bag.cold, RemoteStore)
-    assert bag.mgr.S == 32 and bag.pool.shape == (2, 32, 8)
+    assert bag.mgr.S == 32 and bag.pool.shape == (32 + 8, 8)
     rng = np.random.default_rng(3)
     for i in range(6):
         lo = (i * 32) % 192

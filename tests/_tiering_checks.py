@@ -20,7 +20,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.cache import RemoteStore
+from repro.cache import CacheConfig, RemoteStore
 from repro.core import comm
 from repro.core.embedding_bag import (
     EmbeddingBagConfig, init_tables, make_cache, pooled_lookup_local,
@@ -95,9 +95,10 @@ def fetch_rows_instrumented():
     assert ev[0].axis_size == E
 
 
-def _exactness(backend, *, batches, cfg_kw, batch_kw):
-    cfg = EmbeddingBagConfig(cold_tier="remote", remote_backend=backend,
-                             **cfg_kw)
+def _exactness(backend, *, batches, cache_rows, cfg_kw, batch_kw):
+    cfg = EmbeddingBagConfig(
+        cache=CacheConfig(rows=cache_rows, cold_tier="remote",
+                          remote_backend=backend), **cfg_kw)
     tables = init_tables(jax.random.key(0), cfg)
     cache = make_cache(tables, cfg)
     assert isinstance(cache.cold, RemoteStore)
@@ -116,9 +117,9 @@ def remote_lookup_bitwise_bulk():
     """Remote-tier lookup == uncached oracle, BITWISE, and the hot path
     stays one fused TBE pallas_call (jaxpr-asserted)."""
     cache = _exactness(
-        "bulk", batches=4,
+        "bulk", batches=4, cache_rows=128,
         cfg_kw=dict(num_tables=2, rows_per_table=512, dim=16,
-                    kernel_mode="interpret", cache_rows=128),
+                    kernel_mode="interpret"),
         batch_kw=dict(batch_size=8, pooling=5))
     s = cache.stats
     assert s.hits > 0                      # zipf traffic repeats hot rows
@@ -140,9 +141,9 @@ def remote_lookup_bitwise_onesided():
     """Same bitwise contract with the one-sided RDMA fetch transport
     (small shapes: every (dst, row) pair is one interpreted DMA)."""
     cache = _exactness(
-        "onesided", batches=2,
+        "onesided", batches=2, cache_rows=32,
         cfg_kw=dict(num_tables=2, rows_per_table=64, dim=8,
-                    kernel_mode="interpret", cache_rows=32),
+                    kernel_mode="interpret"),
         batch_kw=dict(batch_size=4, pooling=3))
     assert cache.stats.misses_remote > 0
     # the store threads its mode per-call, never via the global gate
@@ -154,8 +155,9 @@ def tier_churn_promotion_demotion():
     demoted (evicted) back to the remote tier and re-promoted on re-use —
     without ever changing the pooled output."""
     cfg = EmbeddingBagConfig(num_tables=2, rows_per_table=256, dim=8,
-                             kernel_mode="reference", cache_rows=16,
-                             cold_tier="remote", cache_policy="lru")
+                             kernel_mode="reference",
+                             cache=CacheConfig(rows=16, policy="lru",
+                                               cold_tier="remote"))
     tables = init_tables(jax.random.key(2), cfg)
     cache = make_cache(tables, cfg)
     rng = np.random.default_rng(3)
@@ -189,7 +191,8 @@ def tier_churn_promotion_demotion():
     for t in range(2):
         res = cache.mgr.resident_ids(t)
         slots = cache.mgr.slot_of_id[t][res]
-        assert np.array_equal(np.sort(cache.mgr.id_of_slot[t][slots]), res)
+        assert np.array_equal(np.sort(cache.mgr.id_of_slot_t(t)[slots]),
+                              res)
 
 
 def engine_remote_cold_tier():
@@ -200,7 +203,8 @@ def engine_remote_cold_tier():
     from repro.serving.engine import CTRRequest, DLRMEngine
 
     base = dlrm_cfg.smoke()
-    cfg = dataclasses.replace(base, cache_rows=64, cold_tier="remote")
+    cfg = dataclasses.replace(
+        base, cache=CacheConfig(rows=64, cold_tier="remote"))
     params = dlrm_mod.init_params(jax.random.key(0), base)
     rng = np.random.default_rng(4)
     T, L, F = cfg.num_sparse_features, cfg.pooling, cfg.num_dense_features

@@ -8,7 +8,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.cache import CachedEmbeddingBag, SlotPoolManager
+from repro.cache import CacheConfig, CachedEmbeddingBag, SlotPoolManager
 from repro.core.embedding_bag import (
     EmbeddingBagConfig,
     init_tables,
@@ -22,8 +22,9 @@ from repro.core.jagged import JaggedBatch, random_jagged_batch
 def _cfg(T, R=256, D=16, cache_rows=64, policy="lfu", mode="interpret",
          **kw):
     return EmbeddingBagConfig(num_tables=T, rows_per_table=R, dim=D,
-                              kernel_mode=mode, cache_rows=cache_rows,
-                              cache_policy=policy, **kw)
+                              kernel_mode=mode,
+                              cache=CacheConfig(rows=cache_rows,
+                                                policy=policy), **kw)
 
 
 # ---------------------------------------------------------------------------
@@ -69,7 +70,7 @@ def test_eviction_keeps_results_exact(policy):
         res = m.resident_ids(t)
         slots = m.slot_of_id[t][res]
         assert (slots >= 0).all()
-        assert np.array_equal(np.sort(m.id_of_slot[t][slots]), res)
+        assert np.array_equal(np.sort(m.id_of_slot_t(t)[slots]), res)
         assert (m.slot_of_id[t] >= 0).sum() == res.size <= m.S
 
 
@@ -252,9 +253,13 @@ def test_bad_policy_and_zero_rows_raise():
     cfg = _cfg(1, cache_rows=8)
     tables = init_tables(jax.random.key(8), cfg)
     with pytest.raises(ValueError, match="cache_policy"):
-        CachedEmbeddingBag(tables, cfg, policy="fifo")
-    with pytest.raises(ValueError, match="cache_rows"):
-        CachedEmbeddingBag(tables, dataclasses.replace(cfg, cache_rows=0))
+        CachedEmbeddingBag(tables, cfg,
+                           cache=dataclasses.replace(cfg.cache,
+                                                     policy="fifo"))
+    with pytest.raises(ValueError, match="cache rows"):
+        CachedEmbeddingBag(
+            tables,
+            dataclasses.replace(cfg, cache=CacheConfig(rows=0)))
 
 
 def test_pool_never_reallocates():
@@ -266,7 +271,7 @@ def test_pool_never_reallocates():
     rng = np.random.default_rng(6)
     for _ in range(3):
         cache.prefetch(random_jagged_batch(rng, 2, 4, 3, 128, zipf_a=1.2))
-    assert cache.pool.shape == shape == (2, 16, cfg.dim)
+    assert cache.pool.shape == shape == (2 * 16, cfg.dim)   # flat (sum S_t, D)
 
 
 def test_manager_slots_capped_at_rows():

@@ -12,7 +12,7 @@ import jax
 import numpy as np
 import pytest
 
-from repro.cache import CacheStats
+from repro.cache import CacheConfig, CacheStats
 from repro.cache.manager import CacheCapacityError
 from repro.configs import dlrm as dlrm_cfg
 from repro.core.embedding_bag import EmbeddingBagConfig, init_tables
@@ -62,7 +62,12 @@ def test_pipeline_multirank_suite():
 def _bag_cfg(T=2, R=64, D=8, cache_rows=16, **kw):
     return EmbeddingBagConfig(num_tables=T, rows_per_table=R, dim=D,
                               kernel_mode="reference",
-                              cache_rows=cache_rows, **kw)
+                              cache=CacheConfig(rows=cache_rows), **kw)
+
+
+def _with_depth(cfg, depth):
+    return dataclasses.replace(
+        cfg, cache=dataclasses.replace(cfg.cache, pipeline_depth=depth))
 
 
 def test_double_buffer_epoch_swap_protocol():
@@ -170,11 +175,10 @@ def test_pipelined_engine_bitwise_equals_serialized():
     scores bitwise-equal to the depth-1 engine; both engines record the
     same stage spans, only the pipeline measures overlap."""
     base = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference",
-                               cache_rows=12, cache_policy="lru")
+                               cache=CacheConfig(rows=12, policy="lru"))
     params = dlrm_mod.init_params(jax.random.key(3), base)
     serial = make_dlrm_engine(params, base, batch_size=4)
-    piped = make_dlrm_engine(
-        params, dataclasses.replace(base, pipeline_depth=2), batch_size=4)
+    piped = make_dlrm_engine(params, _with_depth(base, 2), batch_size=4)
     rng = np.random.default_rng(4)
     reqs = _zipf_requests(base, 24, rng, churn=32)     # 6 flushes
     for r in reqs:
@@ -204,10 +208,10 @@ def test_pipeline_overflow_falls_back_to_serialized_flush():
     base = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference")
     L = base.pooling
     params = dlrm_mod.init_params(jax.random.key(5), base)
-    cfg = dataclasses.replace(base, cache_rows=L, pipeline_depth=2)
+    cfg = dataclasses.replace(
+        base, cache=CacheConfig(rows=L, pipeline_depth=2))
     piped = make_dlrm_engine(params, cfg, batch_size=2)
-    serial = make_dlrm_engine(
-        params, dataclasses.replace(cfg, pipeline_depth=1), batch_size=2)
+    serial = make_dlrm_engine(params, _with_depth(cfg, 1), batch_size=2)
     T, F = base.num_sparse_features, base.num_dense_features
     rng = np.random.default_rng(6)
     # disjoint full-length working sets: every 2-request union overflows
@@ -230,12 +234,12 @@ def test_pipeline_error_requeues_requests():
     """A mid-run cold-tier failure must not lose requests: the raising
     run_to_completion delivered no scores, so every submitted request
     goes back on the queue and a retry scores them all."""
-    base = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference",
-                               cache_rows=16, pipeline_depth=2)
+    base = dataclasses.replace(
+        dlrm_cfg.smoke(), kernel_mode="reference",
+        cache=CacheConfig(rows=16, pipeline_depth=2))
     params = dlrm_mod.init_params(jax.random.key(7), base)
     piped = make_dlrm_engine(params, base, batch_size=4)
-    serial = make_dlrm_engine(
-        params, dataclasses.replace(base, pipeline_depth=1), batch_size=4)
+    serial = make_dlrm_engine(params, _with_depth(base, 1), batch_size=4)
     rng = np.random.default_rng(8)
     reqs = _zipf_requests(base, 12, rng)
     for r in reqs:
@@ -265,23 +269,24 @@ def test_pipeline_error_requeues_requests():
 
 def test_engine_selection_and_guards():
     base = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference",
-                               cache_rows=16)
+                               cache=CacheConfig(rows=16))
     params = dlrm_mod.init_params(jax.random.key(0), base)
     assert type(make_dlrm_engine(params, base, batch_size=2)) is DLRMEngine
-    piped = make_dlrm_engine(
-        params, dataclasses.replace(base, pipeline_depth=2), batch_size=2)
+    piped = make_dlrm_engine(params, _with_depth(base, 2), batch_size=2)
     assert isinstance(piped, PipelinedDLRMEngine)
     assert isinstance(piped.cache, DoubleBufferedSlotPool)
     assert piped.cache.depth == 2
     # a pipeline without a cache has no prefetch stage to overlap
     with pytest.raises(ValueError, match="cache_rows"):
         PipelinedDLRMEngine(
-            params, dataclasses.replace(base, cache_rows=0,
-                                        pipeline_depth=2), batch_size=2)
+            params,
+            dataclasses.replace(base,
+                                cache=CacheConfig(rows=0, pipeline_depth=2)),
+            batch_size=2)
     with pytest.raises(ValueError, match="pipeline_depth"):
         PipelinedDLRMEngine(params, base, batch_size=2)
     with pytest.raises(ValueError, match="pipeline_depth"):
-        dataclasses.replace(base, pipeline_depth=0)
+        CacheConfig(pipeline_depth=0)
 
 
 # ---------------------------------------------------------------------------

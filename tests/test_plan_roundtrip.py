@@ -13,7 +13,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.cache import CacheCapacityError, CachedEmbeddingBag, SlotPoolManager
+from repro.cache import (
+    CacheCapacityError,
+    CacheConfig,
+    CachedEmbeddingBag,
+    SlotPoolManager,
+)
 from repro.configs import dlrm as dlrm_cfg
 from repro.core.embedding_bag import (
     EmbeddingBagConfig,
@@ -62,7 +67,13 @@ def test_plan_multirank_suite():
 def _cfg(T=3, R=256, D=8, per_table=(64, 16, 32), **kw):
     return EmbeddingBagConfig(num_tables=T, rows_per_table=R, dim=D,
                               kernel_mode="reference",
-                              cache_rows_per_table=per_table, **kw)
+                              cache=CacheConfig(rows_per_table=per_table),
+                              **kw)
+
+
+def _with_warmup(cfg, freqs):
+    return dataclasses.replace(
+        cfg, cache=dataclasses.replace(cfg.cache, warmup_freqs=freqs))
 
 
 def test_heterogeneous_pools_bitwise_under_churn():
@@ -70,7 +81,9 @@ def test_heterogeneous_pools_bitwise_under_churn():
     tables = init_tables(jax.random.key(0), cfg)
     cache = make_cache(tables, cfg)
     assert (cache.mgr.slots_per_table == [64, 16, 32]).all()
-    assert cache.pool.shape == (3, 64, cfg.dim)     # padded to max(S_t)
+    # ONE flat (sum S_t, D) pool — no padding to max(S_t)
+    assert cache.pool.shape == (64 + 16 + 32, cfg.dim)
+    assert cache.hot.live_nbytes == (64 + 16 + 32) * cfg.dim * 4
     rng = np.random.default_rng(0)
     for _ in range(6):
         b = random_jagged_batch(rng, 3, 8, 5, 256, fixed_pooling=False,
@@ -80,15 +93,16 @@ def test_heterogeneous_pools_bitwise_under_churn():
         np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
     s = cache.stats
     assert s.evictions_t is not None and s.evictions_t[1] > 0
-    # padding slots beyond each table's own S_t are never allocated
+    # every slot id stays table-local, within that table's own S_t
     for t in range(3):
         st = cache.mgr.slots_per_table[t]
-        assert (cache.mgr.id_of_slot[t, st:] == -2).all()
         assert cache.mgr.slot_of_id[t].max() < st
-        # indirection invariant per table
+        # indirection invariant per table (flat views)
         res = cache.mgr.resident_ids(t)
         slots = cache.mgr.slot_of_id[t][res]
-        assert np.array_equal(np.sort(cache.mgr.id_of_slot[t][slots]), res)
+        assert np.array_equal(np.sort(cache.mgr.id_of_slot_t(t)[slots]),
+                              res)
+        assert cache.mgr.id_of_slot_t(t).size == st
 
 
 def test_per_table_capacity_error_is_isolated_and_atomic():
@@ -133,8 +147,9 @@ def test_scalar_cache_rows_path_unchanged():
     identical admission/eviction decisions and identical outputs."""
     base = dict(num_tables=2, rows_per_table=128, dim=8,
                 kernel_mode="reference")
-    cfg_s = EmbeddingBagConfig(cache_rows=16, **base)
-    cfg_v = EmbeddingBagConfig(cache_rows_per_table=(16, 16), **base)
+    cfg_s = EmbeddingBagConfig(cache=CacheConfig(rows=16), **base)
+    cfg_v = EmbeddingBagConfig(cache=CacheConfig(rows_per_table=(16, 16)),
+                               **base)
     tables = init_tables(jax.random.key(3), cfg_s)
     a, b = make_cache(tables, cfg_s), make_cache(tables, cfg_v)
     rng = np.random.default_rng(2)
@@ -225,12 +240,12 @@ def test_warmup_then_serve_lru_eviction_order():
     argpartition broke the tie by slot order — evicting the JUST-USED
     row 0 (slot 0)."""
     cfg = EmbeddingBagConfig(num_tables=1, rows_per_table=32, dim=4,
-                             kernel_mode="reference", cache_rows=2,
-                             cache_policy="lru")
+                             kernel_mode="reference",
+                             cache=CacheConfig(rows=2, policy="lru"))
     tables = init_tables(jax.random.key(4), cfg)
     freqs = np.zeros((1, 32))
     freqs[0, 0], freqs[0, 1] = 5, 4          # warmup admits rows 0, 1
-    bag = make_cache(tables, dataclasses.replace(cfg, warmup_freqs=freqs))
+    bag = make_cache(tables, _with_warmup(cfg, freqs))
     assert set(bag.mgr.resident_ids(0)) == {0, 1}
     assert bag.mgr.tick == 1                 # pre-advanced past warmup
 
@@ -284,10 +299,11 @@ def test_unique_miss_pricing_matches_measured_warm_sweep():
     fetch prices checkable against CacheStats."""
     T, R, c, B, L, a = 2, 8192, 1024, 32, 8, 1.0
     cfg = EmbeddingBagConfig(num_tables=T, rows_per_table=R, dim=8,
-                             kernel_mode="reference", cache_rows=c)
+                             kernel_mode="reference",
+                             cache=CacheConfig(rows=c))
     tables = init_tables(jax.random.key(5), cfg)
     freqs = np.arange(1, R + 1, dtype=np.float64) ** -a * 1e6
-    bag = make_cache(tables, dataclasses.replace(cfg, warmup_freqs=freqs))
+    bag = make_cache(tables, _with_warmup(cfg, freqs))
     rng = np.random.default_rng(3)
     for _ in range(8):
         bag.prefetch(random_jagged_batch(rng, T, B, L, R, zipf_a=a))
@@ -354,7 +370,10 @@ def test_pipelined_engine_accepts_plan_and_matches_serialized():
     params = dlrm_mod.init_params(jax.random.key(0), base)
     serial = make_dlrm_engine(params, cfg, batch_size=4)
     piped = make_dlrm_engine(
-        params, dataclasses.replace(cfg, pipeline_depth=2), batch_size=4)
+        params,
+        dataclasses.replace(
+            cfg, cache=dataclasses.replace(cfg.cache, pipeline_depth=2)),
+        batch_size=4)
     assert isinstance(piped, PipelinedDLRMEngine)
     rng = np.random.default_rng(5)
     T, L, F = (cfg.num_sparse_features, cfg.pooling,

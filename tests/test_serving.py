@@ -150,10 +150,11 @@ def test_dlrm_engine_rejects_bad_dtypes():
 
 
 def test_dlrm_engine_cached_matches_uncached():
-    """cfg.cache_rows > 0: flush prefetches into the HBM slot pool and
+    """cfg.cache.rows > 0: flush prefetches into the HBM slot pool and
     scores over it — pCTRs must equal the uncached engine's exactly."""
     import dataclasses
 
+    from repro.cache import CacheConfig
     from repro.configs import dlrm as dlrm_cfg
     from repro.models import dlrm as dlrm_mod
     from repro.serving.engine import CTRRequest, DLRMEngine
@@ -173,7 +174,7 @@ def test_dlrm_engine_cached_matches_uncached():
     ) for rid in range(6)]
 
     plain = DLRMEngine(params, base, batch_size=4)
-    cached_cfg = dataclasses.replace(base, cache_rows=48)
+    cached_cfg = dataclasses.replace(base, cache=CacheConfig(rows=48))
     cached = DLRMEngine(params, cached_cfg, batch_size=4)
     assert cached.cache is not None and plain.cache is None
     for r in reqs:
@@ -229,6 +230,7 @@ def test_dlrm_engine_cached_splits_oversized_working_set():
     pool too small for even one request is rejected at construction."""
     import dataclasses
 
+    from repro.cache import CacheConfig
     from repro.configs import dlrm as dlrm_cfg
     from repro.models import dlrm as dlrm_mod
     from repro.serving.engine import CTRRequest, DLRMEngine
@@ -238,13 +240,14 @@ def test_dlrm_engine_cached_splits_oversized_working_set():
     T, L, F = base.num_sparse_features, base.pooling, base.num_dense_features
 
     with pytest.raises(ValueError, match="cache_rows"):
-        DLRMEngine(params, dataclasses.replace(base, cache_rows=L - 1),
+        DLRMEngine(params,
+                   dataclasses.replace(base, cache=CacheConfig(rows=L - 1)),
                    batch_size=2)
 
     # pool holds exactly one request's working set (L ids/table): a
     # 2-request flush with disjoint ids must split 2 -> 1, score both
     # across flushes, and match the uncached engine exactly
-    cfg = dataclasses.replace(base, cache_rows=L)
+    cfg = dataclasses.replace(base, cache=CacheConfig(rows=L))
     eng = DLRMEngine(params, cfg, batch_size=2)
     plain = DLRMEngine(params, base, batch_size=2)
     rng = np.random.default_rng(9)
@@ -271,12 +274,13 @@ def test_dlrm_engine_cached_splits_oversized_working_set():
 def test_dlrm_engine_cache_rejects_parallel_ctx():
     import dataclasses
 
+    from repro.cache import CacheConfig
     from repro.configs import dlrm as dlrm_cfg
     from repro.models import dlrm as dlrm_mod
     from repro.serving.engine import DLRMEngine
 
     cfg = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference",
-                              cache_rows=16)
+                              cache=CacheConfig(rows=16))
     params = dlrm_mod.init_params(jax.random.key(0), cfg)
     with pytest.raises(NotImplementedError, match="cache"):
         DLRMEngine(params, cfg, batch_size=2, ctx=object())

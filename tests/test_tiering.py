@@ -14,6 +14,7 @@ import numpy as np
 import pytest
 
 from repro.cache import (
+    CacheConfig,
     HostStore,
     RemoteStore,
     SlotPool,
@@ -78,28 +79,28 @@ def test_slot_pool_scatter_fetch_roundtrip():
     pool = SlotPool(num_tables=2, slots=8, dim=4, dtype=np.float32)
     assert pool.tier == "hbm" and pool.slots == 8
     rows = np.arange(12, dtype=np.float32).reshape(3, 4)
-    # flat addresses t*S + slot for (t, slot) in (0,1), (1,0), (1,7)
+    # flat addresses slot_offsets[t] + slot for (t, slot) (0,1), (1,0), (1,7)
     pool.scatter(np.array([0 * 8 + 1, 1 * 8 + 0, 1 * 8 + 7]), rows)
     np.testing.assert_array_equal(
         pool.fetch([0, 1, 1], [1, 0, 7]), rows)
-    assert pool.array.shape == (2, 8, 4)       # never reallocated
+    assert pool.array.shape == (2 * 8, 4)      # flat, never reallocated
     assert pool.nbytes == 2 * 8 * 4 * 4
+    assert pool.live_nbytes == pool.nbytes     # exact: no padding to discount
 
 
 def test_make_cold_store_dispatch_and_errors():
     tables = np.zeros((1, 8, 4), np.float32)
-    cfg = EmbeddingBagConfig(num_tables=1, rows_per_table=8, dim=4,
-                             cache_rows=4)
-    assert isinstance(make_cold_store(tables, cfg), HostStore)
+    cc = CacheConfig(rows=4)
+    assert isinstance(make_cold_store(tables, cc), HostStore)
     with pytest.raises(ValueError, match="cold_tier"):
-        make_cold_store(tables, dataclasses.replace(cfg, cold_tier="disk"))
+        make_cold_store(tables, dataclasses.replace(cc, cold_tier="disk"))
     with pytest.raises(ValueError, match="backend"):
         RemoteStore(tables, hosts=2, backend="tcp")
     # the single-process simulation needs >= 2 devices to back remote hosts
     if len(jax.devices()) == 1:
         with pytest.raises(ValueError, match="devices"):
             make_cold_store(tables,
-                            dataclasses.replace(cfg, cold_tier="remote",
+                            dataclasses.replace(cc, cold_tier="remote",
                                                 remote_hosts=2))
     # (full RemoteStore behaviour is covered by _tiering_checks.py)
 
@@ -115,8 +116,13 @@ def test_remote_store_rejects_uneven_rows():
 
 def _cfg(T=2, R=256, D=8, cache_rows=16, **kw):
     return EmbeddingBagConfig(num_tables=T, rows_per_table=R, dim=D,
-                              kernel_mode="reference", cache_rows=cache_rows,
-                              **kw)
+                              kernel_mode="reference",
+                              cache=CacheConfig(rows=cache_rows), **kw)
+
+
+def _with_warmup(cfg, freqs):
+    return dataclasses.replace(
+        cfg, cache=dataclasses.replace(cfg.cache, warmup_freqs=freqs))
 
 
 def test_warmup_freqs_skip_cold_start_miss_burst():
@@ -124,7 +130,7 @@ def test_warmup_freqs_skip_cold_start_miss_burst():
     tables = init_tables(jax.random.key(0), cfg)
     freqs = np.zeros((2, 256))
     freqs[:, :16] = np.arange(16, 0, -1)     # logged: rows 0..15 hot
-    warm = make_cache(tables, dataclasses.replace(cfg, warmup_freqs=freqs))
+    warm = make_cache(tables, _with_warmup(cfg, freqs))
     cold = make_cache(tables, cfg)
     assert warm.mgr.resident_rows == 32      # top-S of both tables admitted
     assert warm.stats.bytes_h2d == 32 * warm.row_bytes   # warmup traffic...
@@ -146,7 +152,7 @@ def test_warmup_freqs_broadcast_and_validation():
     # (R,) broadcasts to every table
     freqs = np.zeros(64)
     freqs[:4] = [4, 3, 2, 1]
-    bag = make_cache(tables, dataclasses.replace(cfg, warmup_freqs=freqs))
+    bag = make_cache(tables, _with_warmup(cfg, freqs))
     for t in range(3):
         assert set(bag.mgr.resident_ids(t)) == {0, 1, 2, 3}
     m = SlotPoolManager(3, 64, 8)
@@ -166,7 +172,7 @@ def test_warmup_seeds_lfu_ranking():
     tables = init_tables(jax.random.key(2), cfg)
     freqs = np.zeros((1, 32))
     freqs[0, 0], freqs[0, 1] = 100, 2        # both pre-admitted
-    bag = make_cache(tables, dataclasses.replace(cfg, warmup_freqs=freqs))
+    bag = make_cache(tables, _with_warmup(cfg, freqs))
     assert set(bag.mgr.resident_ids(0)) == {0, 1}
     idx = jnp.full((1, 1, 1), 9, jnp.int32)  # force one eviction
     bag.prefetch(JaggedBatch(idx, jnp.ones((1, 1), jnp.int32)))
