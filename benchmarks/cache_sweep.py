@@ -47,6 +47,7 @@ from repro.core.perf_model import (
     embedding_bag_time,
     zipf_hit_rate,
 )
+from repro.obs import SweepReport
 
 RATIOS = (0.005, 0.01, 0.05, 0.20)
 ZIPF_AS = (1.05, 1.2)
@@ -120,10 +121,10 @@ def run_config(ratio: float, a: float, policy: str, shape: dict,
 def run(smoke: bool) -> str:
     shape = SMOKE if smoke else FULL
     kernel_mode = "interpret" if smoke else "reference"
-    out = io.StringIO()
-    print("sweep,ratio,zipf_a,policy,cache_rows,hit_rate,analytic_hit_rate,"
-          "hits,misses,evictions,mb_h2d,platform,cached_us,dist_us,speedup",
-          file=out)
+    rep = SweepReport(
+        "sweep", "ratio", "zipf_a", "policy", "cache_rows", "hit_rate",
+        "analytic_hit_rate", "hits", "misses", "evictions", "mb_h2d",
+        "platform", "cached_us", "dist_us", "speedup")
     w = EmbeddingWorkload(**PAPER)
     n_dist = devices_for_table(PAPER_TABLE_BYTES * 26, H100_DGX)
     for a in ZIPF_AS:
@@ -138,13 +139,16 @@ def run(smoke: bool) -> str:
                 dist = embedding_bag_time(w, n_dist, hw)
                 speed = cache_speedup_vs_distributed(
                     PAPER_TABLE_BYTES * 26, w, hw, hit_rate=stats.hit_rate)
-                print(f"cache,{ratio},{a},lfu,{int(shape['rows']*ratio)},"
-                      f"{stats.hit_rate:.4f},{analytic:.4f},{stats.hits},"
-                      f"{stats.misses},{stats.evictions},"
-                      f"{stats.bytes_h2d/2**20:.3f},{hw.name},"
-                      f"{cached*1e6:.2f},{dist*1e6:.2f},{speed:.2f}",
-                      file=out)
-    return out.getvalue()
+                rep.add(sweep="cache", ratio=ratio, zipf_a=a, policy="lfu",
+                        cache_rows=int(shape["rows"] * ratio),
+                        hit_rate=f"{stats.hit_rate:.4f}",
+                        analytic_hit_rate=f"{analytic:.4f}",
+                        hits=stats.hits, misses=stats.misses,
+                        evictions=stats.evictions,
+                        mb_h2d=f"{stats.bytes_h2d/2**20:.3f}",
+                        platform=hw.name, cached_us=f"{cached*1e6:.2f}",
+                        dist_us=f"{dist*1e6:.2f}", speedup=f"{speed:.2f}")
+    return rep.csv()
 
 
 def main():

@@ -27,7 +27,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import io
 import time
 
 import numpy as np
@@ -44,6 +43,7 @@ from repro.core.perf_model import (
     tiered_speedup_vs_distributed,
 )
 from repro.cache import CacheConfig, HostStore
+from repro.obs import SweepReport
 from repro.models import dlrm as dlrm_mod
 from repro.serving.engine import CTRRequest, make_dlrm_engine
 
@@ -221,7 +221,7 @@ def measured(shape: dict) -> dict:
     return rows
 
 
-def modeled(csv: io.StringIO) -> None:
+def modeled(rep: SweepReport) -> None:
     w = EmbeddingWorkload(**PAPER)
     print("\n== MODELED (steady-state per-batch; Fig. 9 recovery) ==")
     print("hosts hit    platform   depth1_us  depth2_us  rec_d1  rec_d2")
@@ -240,8 +240,10 @@ def modeled(csv: io.StringIO) -> None:
                 print(f"{hosts:5d} {hit:.2f}  {hw.name:12s} "
                       f"{t1*1e6:9.1f}  {t2*1e6:9.1f}  {r1:6.1f}  {r2:6.1f}")
                 for depth, t, r in ((1, t1, r1), (2, t2, r2)):
-                    csv.write(f"modeled,{hosts},{hit},{depth},{hw.name},"
-                              f"{t*1e6:.2f},{r:.2f}\n")
+                    rep.add(sweep="modeled", hosts=hosts, hit_rate=hit,
+                            depth=depth, platform=hw.name,
+                            per_batch_us=f"{t*1e6:.2f}",
+                            recovery=f"{r:.2f}")
 
 
 def main():
@@ -251,18 +253,22 @@ def main():
     ap.add_argument("--csv", type=str, default=None)
     args = ap.parse_args()
 
-    csv = io.StringIO()
-    csv.write("sweep,hosts,hit_rate,depth,platform,per_batch_us,recovery\n")
+    rep = SweepReport("sweep", "hosts", "hit_rate", "depth", "platform",
+                      "per_batch_us", "recovery")
     m = measured(SMOKE if args.smoke else FULL)
-    csv.write(f"measured,1,{m['hit_rate_piped']:.3f},1,cpu-host,"
-              f"{m['serial_span_sum_ms']*1e3:.1f},1.0\n")
-    csv.write(f"measured,1,{m['hit_rate_piped']:.3f},2,cpu-host,"
-              f"{m['piped_wall_ms']*1e3:.1f},"
-              f"{m['serial_span_sum_ms']/max(m['piped_wall_ms'],1e-9):.2f}\n")
-    modeled(csv)
+    rep.add(sweep="measured", hosts=1,
+            hit_rate=f"{m['hit_rate_piped']:.3f}", depth=1,
+            platform="cpu-host",
+            per_batch_us=f"{m['serial_span_sum_ms']*1e3:.1f}",
+            recovery="1.0")
+    rep.add(sweep="measured", hosts=1,
+            hit_rate=f"{m['hit_rate_piped']:.3f}", depth=2,
+            platform="cpu-host",
+            per_batch_us=f"{m['piped_wall_ms']*1e3:.1f}",
+            recovery=f"{m['serial_span_sum_ms']/max(m['piped_wall_ms'],1e-9):.2f}")
+    modeled(rep)
     if args.csv:
-        with open(args.csv, "w") as f:
-            f.write(csv.getvalue())
+        rep.write(args.csv)
         print(f"\nwrote {args.csv}")
 
 

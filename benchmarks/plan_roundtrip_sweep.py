@@ -38,7 +38,6 @@ from __future__ import annotations
 
 import argparse
 import dataclasses
-import io
 
 import numpy as np
 import jax
@@ -55,6 +54,7 @@ from repro.core.perf_model import (
 )
 from repro.core.sharding_plan import TableSpec, plan
 from repro.models import dlrm as dlrm_mod
+from repro.obs import SweepReport
 from repro.serving.engine import CTRRequest, make_dlrm_engine
 
 ZIPF_A = 0.9          # <= 1: exercises the truncated-zeta hit-rate fix
@@ -156,10 +156,10 @@ def roundtrip(shape, p):
 
 
 def report(shape, p, stats) -> str:
-    out = io.StringIO()
-    print("sweep,table,strategy,cache_rows,est_hit_rate,measured_hit_rate,"
-          "hit_err,model_fetch_rows_per_batch,measured_fetch_rows_per_batch",
-          file=out)
+    rep = SweepReport(
+        "sweep", "table", "strategy", "cache_rows", "est_hit_rate",
+        "measured_hit_rate", "hit_err", "model_fetch_rows_per_batch",
+        "measured_fetch_rows_per_batch")
     M = shape["measure"]
     hr_t = stats.hit_rate_t
     lookups_per_table = shape["batch"] * shape["pooling"]
@@ -176,29 +176,33 @@ def report(shape, p, stats) -> str:
         # fetched rows are split per TIER (not per table), so the
         # per-table column reports the model and the totals line below
         # compares against the measured sum
-        print(f"roundtrip,{i},{pl.strategy},{pl.cache_rows},"
-              f"{pl.est_hit_rate:.4f},{measured:.4f},{err:.4f},"
-              f"{model_fetch:.1f},", file=out)
+        rep.add(sweep="roundtrip", table=i, strategy=pl.strategy,
+                cache_rows=pl.cache_rows,
+                est_hit_rate=f"{pl.est_hit_rate:.4f}",
+                measured_hit_rate=f"{measured:.4f}",
+                hit_err=f"{err:.4f}",
+                model_fetch_rows_per_batch=f"{model_fetch:.1f}",
+                measured_fetch_rows_per_batch="")
     measured_fetch = stats.fetch_host + stats.fetch_remote
     meas_per_batch = measured_fetch / M
     rel = abs(meas_per_batch - model_fetch_total) / max(meas_per_batch, 1e-9)
-    print(f"# totals: measured fetch rows/batch = {meas_per_batch:.1f}, "
-          f"modeled (unique-miss pricing) = {model_fetch_total:.1f} "
-          f"(rel err {rel:.3f}); worst per-table |hit err| = "
-          f"{worst_hit:.4f}", file=out)
+    rep.comment(f"totals: measured fetch rows/batch = {meas_per_batch:.1f}, "
+                f"modeled (unique-miss pricing) = {model_fetch_total:.1f} "
+                f"(rel err {rel:.3f}); worst per-table |hit err| = "
+                f"{worst_hit:.4f}")
     # the old per-lookup charge for contrast (what the model used to bill)
     old_total = sum(
         (1.0 - p.placement_at(i).est_hit_rate) * lookups_per_table
         for i in range(shape["tables"]))
-    print(f"# old per-lookup pricing would bill {old_total:.1f} rows/batch",
-          file=out)
+    rep.comment(f"old per-lookup pricing would bill {old_total:.1f} "
+                f"rows/batch")
     assert worst_hit <= TOL_HIT, \
         f"measured per-table hit rate {worst_hit:.4f} off the plan's price" \
         f" by more than {TOL_HIT} — the round trip does not close"
     assert rel <= TOL_FETCH, \
         f"measured fetch traffic off the unique-miss model by {rel:.3f}" \
         f" (> {TOL_FETCH})"
-    return out.getvalue()
+    return rep.csv()
 
 
 def main():

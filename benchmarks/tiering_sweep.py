@@ -35,7 +35,6 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=4")
 
 import argparse
-import io
 
 import jax
 import jax.numpy as jnp
@@ -60,6 +59,7 @@ from repro.core.perf_model import (
     zipf_hit_rate,
 )
 from repro.core.sharding_plan import TableSpec, plan
+from repro.obs import SweepReport
 
 HOSTS = (1, 2, 8, 32, 128)
 RATIOS = (0.005, 0.01, 0.05, 0.20)
@@ -138,9 +138,9 @@ def measured(shape: dict) -> dict:
 
 
 def modeled_csv() -> str:
-    out = io.StringIO()
-    print("sweep,hosts,transport,ratio,zipf_a,hit_rate,platform,tiered_us,"
-          "dist_us,recovery", file=out)
+    rep = SweepReport("sweep", "hosts", "transport", "ratio", "zipf_a",
+                      "hit_rate", "platform", "tiered_us", "dist_us",
+                      "recovery")
     w = EmbeddingWorkload(**PAPER)
     rows_total = int(PAPER_TABLE_BYTES // (PAPER["dim"] * 4))
     for hosts in HOSTS:
@@ -157,10 +157,14 @@ def modeled_csv() -> str:
                     # == tiered_speedup_vs_distributed, from the same two
                     # numbers the row prints (consistent by construction)
                     rec = dist / tiered
-                    print(f"tiered,{hosts},{transport},{ratio},{ZIPF_A},"
-                          f"{hr:.4f},{hw.name},{tiered*1e6:.2f},"
-                          f"{dist*1e6:.2f},{rec:.2f}", file=out)
-    return out.getvalue()
+                    rep.add(sweep="tiered", hosts=hosts,
+                            transport=transport, ratio=ratio,
+                            zipf_a=ZIPF_A, hit_rate=f"{hr:.4f}",
+                            platform=hw.name,
+                            tiered_us=f"{tiered*1e6:.2f}",
+                            dist_us=f"{dist*1e6:.2f}",
+                            recovery=f"{rec:.2f}")
+    return rep.csv()
 
 
 def planned(smoke: bool):

@@ -33,6 +33,7 @@ whichever tier served it).
 """
 from __future__ import annotations
 
+import itertools
 import time
 from typing import Optional
 
@@ -57,6 +58,12 @@ def _valid_mask(indices: np.ndarray, lengths: Optional[np.ndarray]):
         return indices, np.ones(indices.shape, bool)
     L = indices.shape[-1]
     return indices, np.arange(L) < np.asarray(lengths)[..., None]
+
+
+# process-wide prefetch sequence: tags each prefetch's cache-lane spans
+# so the obs tracer can group one prefetch's fetch + scatter into one
+# calibration sample even when several bags share a timeline
+_PREFETCH_SEQ = itertools.count()
 
 
 def make_cold_store(tables, cache: CacheConfig) -> TableStore:
@@ -112,6 +119,10 @@ class CachedEmbeddingBag:
         # stats may be SHARED: the double-buffered pipeline pool passes
         # one CacheStats so every buffer's traffic lands in one record
         self.stats = stats if stats is not None else CacheStats()
+        # optional obs tracer (duck-typed: anything with add_span) — the
+        # engine attaches it so admit/fetch/scatter land on the unified
+        # timeline's cache lane; None costs one attribute check
+        self.tracer = None
         self.row_bytes = D * self.dtype.itemsize
         if cc.warmup_freqs is not None:
             self.mgr.seed_frequencies(np.asarray(cc.warmup_freqs))
@@ -158,6 +169,16 @@ class CachedEmbeddingBag:
             except BaseException:
                 self.mgr.invalidate_fetch(plan)
                 raise
+            if self.tracer is not None:
+                # one seq per prefetch: the tracer groups this pair into
+                # one calibration sample (Tracer.stage_samples)
+                args = {"seq": next(_PREFETCH_SEQ),
+                        "bytes": int(rows.nbytes), "tier": self.cold.tier}
+                self.tracer.add_span("cache.fetch", t0, ts, lane="cache",
+                                     cat="cache", args=args)
+                self.tracer.add_span("cache.scatter", ts, ts + scatter_s,
+                                     lane="cache", cat="cache",
+                                     args=dict(args))
         self.stats.add_time("prefetch",
                             time.perf_counter() - t0 - scatter_s)
         self.stats.add_time("scatter", scatter_s)
@@ -177,7 +198,12 @@ class CachedEmbeddingBag:
         """
         t0 = time.perf_counter()
         plan = self.mgr.prepare(*_valid_mask(indices, lengths))
-        self.stats.add_time("prefetch", time.perf_counter() - t0)
+        t1 = time.perf_counter()
+        self.stats.add_time("prefetch", t1 - t0)
+        if self.tracer is not None:
+            self.tracer.add_span("cache.admit", t0, t1, lane="cache",
+                                 cat="cache",
+                                 args={"tier": self.cold.tier})
         self._apply_fetch(plan, count_batch=True)
         return plan.remapped
 

@@ -84,8 +84,9 @@ class CacheStats:
 
     STAGES = ("prefetch", "scatter", "forward", "overlap")
     # bump when as_dict() keys change meaning or spelling — benchmark
-    # CSVs and the plan-roundtrip assertions key off this contract
-    SCHEMA_VERSION = 2
+    # CSVs and the plan-roundtrip assertions key off this contract.
+    # v3: always-present "lookups" / "lookups_t" keys
+    SCHEMA_VERSION = 3
 
     @property
     def lookups(self) -> int:
@@ -145,7 +146,7 @@ class CacheStats:
             cur += values
 
     def update(self, *, hits: int, misses: int, evictions: int,
-               bytes_h2d: int, misses_host: int = None,
+               bytes_h2d: int, misses_host: Optional[int] = None,
                misses_remote: int = 0, bytes_remote: int = 0,
                fetch_host: int = 0, fetch_remote: int = 0,
                hits_t=None, misses_t=None, evictions_t=None,
@@ -179,12 +180,14 @@ class CacheStats:
     def as_dict(self) -> Dict[str, float]:
         """Stable serialization schema (``SCHEMA_VERSION``).
 
-        Every key below is ALWAYS present: scalar counters as ints,
-        rates as floats, per-table ``*_t`` splits as plain Python lists
-        (length T) or None before any per-table update, stage timers as
-        float seconds.  Benchmark CSV writers and the plan-roundtrip
-        sweep consume this dict verbatim — never rename a key without
-        bumping ``schema_version``."""
+        Every key below is ALWAYS present: scalar counters as ints
+        (including the derived ``lookups = hits + misses``), rates as
+        floats, per-table ``*_t`` splits (``lookups_t`` included) as
+        plain Python lists (length T) or None before any per-table
+        update, stage timers as float seconds.  Benchmark CSV writers,
+        the plan-roundtrip sweep, and obs metrics producers consume this
+        dict verbatim — never rename a key without bumping
+        ``schema_version``."""
         return {
             "schema_version": self.SCHEMA_VERSION,
             "hits": self.hits,
@@ -197,6 +200,7 @@ class CacheStats:
             "fetch_host": self.fetch_host,
             "fetch_remote": self.fetch_remote,
             "batches": self.batches,
+            "lookups": self.lookups,
             "hit_rate": self.hit_rate,
             "remote_miss_fraction": self.remote_miss_fraction,
             "hits_t": (None if self.hits_t is None
@@ -205,6 +209,8 @@ class CacheStats:
                          else self.misses_t.tolist()),
             "evictions_t": (None if self.evictions_t is None
                             else self.evictions_t.tolist()),
+            "lookups_t": (None if self.hits_t is None
+                          else self.lookups_t.tolist()),
             "hit_rate_t": (None if self.hits_t is None
                            else [round(float(r), 4)
                                  for r in self.hit_rate_t]),

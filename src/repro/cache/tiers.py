@@ -34,6 +34,7 @@ from __future__ import annotations
 
 import abc
 import functools
+import time
 import warnings
 from typing import Optional
 
@@ -273,7 +274,19 @@ class RemoteStore(TableStore):
                  + row_ids % self._rows_per_host).astype(np.int32)
         m = local.shape[0]
         local, owner = _pad_pow2([local, owner])
+        t0 = time.perf_counter()
         out = self._fetch(self.shards, jnp.asarray(local), jnp.asarray(owner))
         # device->host roundtrip: the payloads land on the serving host
         # (modeling NIC -> host RAM) before the pool scatter moves them h2d
-        return np.asarray(out)[:m]
+        result = np.asarray(out)[:m]
+        # compiled programs never re-trace, so comm._record's trace-time
+        # event carries no per-execution wall clock — record the measured
+        # dispatch->materialize interval with the stacked payload bytes
+        # (H contributions of the padded request, matching _record's
+        # accounting of the traced (E, M, D) contrib tensor)
+        comm.record_runtime(
+            "fetch_rows",
+            self.hosts * local.shape[0] * self.shards.shape[-1]
+            * self.shards.dtype.itemsize,
+            self.hosts, self.backend, t0, time.perf_counter())
+        return result

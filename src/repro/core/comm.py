@@ -25,7 +25,8 @@ from __future__ import annotations
 import contextlib
 import dataclasses
 import threading
-from typing import List, Optional
+import time
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -45,6 +46,13 @@ class CollectiveEvent:
     bytes_in: int      # local payload bytes entering the collective
     axis_size: int
     backend: str
+    # wall-clock ``time.perf_counter`` stamps, recorded at dispatch so
+    # the event can land on the unified trace timeline (repro/obs/).
+    # 0.0/0.0 is the back-compat default: positional 4-field
+    # constructions keep working, and trace-time records (t0 == t1) are
+    # distinguishable from runtime-timed ones (t1 > t0).
+    t0: float = 0.0
+    t1: float = 0.0
 
 
 class _Log(threading.local):
@@ -53,6 +61,19 @@ class _Log(threading.local):
 
 
 _LOG = _Log()
+
+# process-wide event sink (repro.obs.Tracer): unlike the thread-local
+# instrument() log, events recorded on BACKGROUND threads (the pipelined
+# engine's prefetch worker) reach it too
+_SINK: Optional[Callable[[CollectiveEvent], object]] = None
+
+
+def set_event_sink(fn: Optional[Callable[[CollectiveEvent], object]]):
+    """Install a process-wide CollectiveEvent callback (None removes it);
+    returns the previous sink so callers can restore it."""
+    global _SINK
+    prev, _SINK = _SINK, fn
+    return prev
 
 
 @contextlib.contextmanager
@@ -65,13 +86,34 @@ def instrument():
         _LOG.events = prev
 
 
+def _emit(ev: CollectiveEvent):
+    if _LOG.events is not None:
+        _LOG.events.append(ev)
+    if _SINK is not None:
+        _SINK(ev)
+
+
 def _record(op: str, array, axis_name, backend: str):
-    if _LOG.events is None:
+    if _LOG.events is None and _SINK is None:
         return
     size = int(np.prod(array.shape)) * jnp.dtype(array.dtype).itemsize
-    _LOG.events.append(
-        CollectiveEvent(op, size, axis_size(axis_name), backend)
-    )
+    t = time.perf_counter()
+    _emit(CollectiveEvent(op, size, axis_size(axis_name), backend, t, t))
+
+
+def record_runtime(op: str, nbytes: int, n_devices: int, backend: str,
+                   t0: float, t1: float):
+    """Record a RUNTIME-timed collective event (``t1 > t0``).
+
+    ``_record`` fires at jit trace time only — a compiled program never
+    re-traces, so its events carry no per-execution wall clock.  Callers
+    that execute a compiled collective (e.g. ``RemoteStore.fetch``)
+    record the measured dispatch->materialize interval here instead.
+    """
+    if _LOG.events is None and _SINK is None:
+        return
+    _emit(CollectiveEvent(op, int(nbytes), int(n_devices), backend,
+                          float(t0), float(t1)))
 
 
 # ---------------------------------------------------------------------------

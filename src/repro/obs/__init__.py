@@ -1,0 +1,77 @@
+"""``repro.obs`` — the unified telemetry subsystem.
+
+One bundle (:class:`Telemetry`) carries the two halves of observability:
+
+  * :class:`~repro.obs.metrics.MetricsRegistry` — counters, gauges, and
+    log-bucketed latency histograms (p50/p95/p99) behind one versioned
+    ``snapshot()`` schema; external records like
+    :class:`repro.cache.CacheStats` join as producers.
+  * :class:`~repro.obs.trace.Tracer` — every engine stage span, pipeline
+    ``StageSpan``, per-request enqueue->score latency span, and
+    timestamped ``CollectiveEvent`` merged onto ONE ``perf_counter``
+    timeline, exportable as Chrome trace-event / Perfetto JSON and
+    projectable onto ``perf_model.calibrate``'s ``StageSample`` inputs.
+
+Wiring: pass ``telemetry=Telemetry()`` to
+:func:`repro.serving.engine.make_dlrm_engine` (either engine class).
+The engine stamps request enqueue times at ``submit``, records
+prefetch/forward spans at ``flush``, attaches the tracer to its
+``CachedEmbeddingBag`` (cache-lane spans) and its ``PipelineTrace``
+(pipeline-lane spans), and registers its ``CacheStats`` as a metrics
+producer.  ``telemetry.tracer.install_comm_sink()`` additionally lands
+``comm.fetch_rows`` collective events on the comm lane.
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional
+
+from repro.obs.export import SweepReport, write_snapshot
+from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.trace import LANES, Span, Tracer, validate_chrome_trace
+
+__all__ = [
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "LANES", "Span", "Tracer", "validate_chrome_trace",
+    "SweepReport", "write_snapshot", "Telemetry",
+]
+
+
+class Telemetry:
+    """One metrics registry + one tracer, wired together.
+
+    The request-latency path: engines call :meth:`record_request` when a
+    request's score materializes — one span on the request lane AND one
+    observation in the ``<engine>.request_latency_s`` histogram, so both
+    the timeline and the p50/p99 readout see the same interval.
+    """
+
+    def __init__(self, *, enabled: bool = True):
+        self.metrics = MetricsRegistry()
+        self.tracer = Tracer(enabled=enabled)
+
+    @property
+    def enabled(self) -> bool:
+        return self.tracer.enabled
+
+    def record_request(self, engine: str, rid: int, t_enqueue: float,
+                       t_scored: float) -> None:
+        """One request's enqueue -> score interval (perf_counter stamps)."""
+        self.tracer.add_span(
+            "request", t_enqueue, t_scored, lane="request", cat="request",
+            args={"rid": rid, "engine": engine})
+        self.metrics.histogram(
+            f"{engine}.request_latency_s", unit="s").observe(
+                max(0.0, t_scored - t_enqueue))
+
+    def request_latency(self, engine: str):
+        """The engine's latency histogram (creates it if unseen)."""
+        return self.metrics.histogram(f"{engine}.request_latency_s",
+                                      unit="s")
+
+    def export_trace(self, path: str) -> str:
+        return self.tracer.export(path)
+
+    @staticmethod
+    def now() -> float:
+        return time.perf_counter()

@@ -1,0 +1,94 @@
+"""Shared benchmark exporters: one CSV assembler, one snapshot writer.
+
+Every sweep in ``benchmarks/`` used to hand-roll its CSV — an
+``io.StringIO``, a hand-printed header, and f-string rows whose column
+order silently drifted from the header's.  :class:`SweepReport` is the
+one assembler they now share: columns are declared once, every row is
+validated against them, and comment lines (the ``# ...`` context the
+sweeps interleave) ride along in order.
+
+:func:`write_snapshot` is the matching JSON artifact writer — a
+:class:`~repro.obs.metrics.MetricsRegistry` snapshot plus arbitrary
+extras under one top-level schema (the CI obs-smoke step's
+``BENCH_obs.json``).
+"""
+from __future__ import annotations
+
+import json
+from typing import Dict, List, Optional, Sequence
+
+SNAPSHOT_SCHEMA_VERSION = 1
+
+
+class SweepReport:
+    """Column-checked CSV assembly for the benchmark sweeps.
+
+    >>> rep = SweepReport("sweep", "ratio", "hit_rate")
+    >>> rep.add(sweep="cache", ratio=0.01, hit_rate="0.9372")
+    >>> rep.comment("steady state after 150 warmup batches")
+    >>> print(rep.csv())
+
+    Values are written with ``str()`` — callers keep formatting floats
+    exactly as before (the column contract is order + presence, not
+    precision).
+    """
+
+    def __init__(self, *columns: str):
+        if not columns:
+            raise ValueError("SweepReport needs at least one column")
+        if len(set(columns)) != len(columns):
+            raise ValueError(f"duplicate columns in {columns}")
+        self.columns: Sequence[str] = columns
+        self._lines: List[str] = []
+
+    def add(self, **values) -> None:
+        """Append one row; every declared column must be present and no
+        extras allowed (the drift this class exists to prevent)."""
+        missing = [c for c in self.columns if c not in values]
+        extra = [k for k in values if k not in self.columns]
+        if missing or extra:
+            raise ValueError(
+                f"row does not match columns {list(self.columns)}: "
+                f"missing {missing}, unexpected {extra}")
+        self._lines.append(",".join(str(values[c]) for c in self.columns))
+
+    def comment(self, text: str) -> None:
+        """Interleave a ``# ...`` context line at the current position."""
+        self._lines.append(f"# {text}")
+
+    @property
+    def header(self) -> str:
+        return ",".join(self.columns)
+
+    def __len__(self) -> int:
+        return sum(not ln.startswith("#") for ln in self._lines)
+
+    def csv(self) -> str:
+        """Header + rows/comments, newline-terminated."""
+        return "\n".join([self.header, *self._lines]) + "\n"
+
+    def write(self, path: str) -> str:
+        with open(path, "w") as f:
+            f.write(self.csv())
+        return path
+
+
+def write_snapshot(path: str, *, metrics=None,
+                   extra: Optional[Dict] = None) -> str:
+    """Write a versioned JSON benchmark artifact.
+
+    ``metrics`` is a :class:`~repro.obs.metrics.MetricsRegistry` (its
+    ``snapshot()`` lands under ``"metrics"``); ``extra`` merges in
+    sweep-specific results (calibration numbers, assertions' measured
+    values).  Returns ``path``.
+    """
+    payload: Dict[str, object] = {
+        "schema_version": SNAPSHOT_SCHEMA_VERSION,
+    }
+    if metrics is not None:
+        payload["metrics"] = metrics.snapshot()
+    if extra:
+        payload.update(extra)
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=2, default=str)
+    return path

@@ -72,16 +72,29 @@ class StageSpan:
 
 
 class PipelineTrace:
-    """Recorded stage spans — the pipeline's observability surface."""
+    """Recorded stage spans — the pipeline's observability surface.
 
-    def __init__(self):
+    With a ``tracer`` (:class:`repro.obs.Tracer`, duck-typed: anything
+    with ``add_span``) every recorded span is ALSO mirrored onto the
+    unified timeline's pipeline lane as ``pipeline.<stage>``, tagged
+    with the owning engine's ``label`` — one merged view across the
+    serialized and pipelined engines.
+    """
+
+    def __init__(self, tracer=None, label: str = "pipeline"):
         self.spans: List[StageSpan] = []
+        self.tracer = tracer
+        self.label = label
 
     def record(self, stage: str, batch: int, start: float,
                end: float) -> None:
         if stage not in STAGES:
             raise ValueError(f"unknown stage {stage!r}; one of {STAGES}")
         self.spans.append(StageSpan(stage, batch, start, end))
+        if self.tracer is not None:
+            self.tracer.add_span(
+                f"pipeline.{stage}", start, end, lane="pipeline",
+                cat="pipeline", args={"engine": self.label, "batch": batch})
 
     def by_stage(self, stage: str) -> List[StageSpan]:
         return [s for s in self.spans if s.stage == stage]

@@ -225,13 +225,32 @@ class DLRMEngine:
     hit rate (``cache_stats().hit_rate_t``) is directly comparable against the
     plan's priced ``est_hit_rate`` — see
     benchmarks/plan_roundtrip_sweep.py.
+
+    ``telemetry`` (a :class:`repro.obs.Telemetry`) opts the engine into
+    the unified timeline: ``submit`` stamps each request's enqueue time,
+    ``flush`` records prefetch/forward spans on the engine lane and one
+    enqueue->score latency observation per scored request
+    (``<obs_name>.request_latency_s`` histogram + request-lane span),
+    the cache's admit/fetch/scatter spans land on the cache lane, and
+    the engine's ``CacheStats`` joins ``telemetry.metrics`` as the
+    ``<obs_name>.cache`` producer.  Default None: zero overhead beyond
+    one attribute check per flush.
     """
 
+    OBS_NAME = "dlrm"
+
     def __init__(self, params, cfg: DLRMConfig, batch_size: int,
-                 ctx: Optional[ParallelContext] = None):
+                 ctx: Optional[ParallelContext] = None, *,
+                 telemetry=None, obs_name: Optional[str] = None):
         self.params, self.cfg, self.ctx = params, cfg, ctx
         self.batch_size = batch_size
         self.queue: List[CTRRequest] = []
+        self.telemetry = telemetry
+        self.obs_name = obs_name if obs_name is not None else self.OBS_NAME
+        # rid -> perf_counter enqueue stamp; popped at scoring so a
+        # pipeline failure's requeued requests keep their ORIGINAL stamps
+        # (latency measures from first submit, not the retry)
+        self._enqueue_t: Dict[int, float] = {}
 
         self.cache = None
         if cfg.cache.enabled or cfg.sharding_plan is not None:
@@ -265,6 +284,16 @@ class DLRMEngine:
             # engine's device-resident tables so serving holds only the
             # slot pool in HBM — the whole point of the tiered cache
             self.params = {**params, "tables": None}
+            if self.telemetry is not None:
+                # cache-lane spans: every bag of the (possibly
+                # double-buffered) pool records onto the one timeline
+                bags = (self.cache.buffers
+                        if hasattr(self.cache, "buffers") else [self.cache])
+                for bag in bags:
+                    bag.tracer = self.telemetry.tracer
+                self.telemetry.metrics.register_producer(
+                    f"{self.obs_name}.cache", self.cache.stats.as_dict,
+                    replace=True)
 
         def fwd(p, dense, batch):
             return jax.nn.sigmoid(
@@ -320,6 +349,8 @@ class DLRMEngine:
             raise ValueError(
                 f"request {req.rid}: indices must be in [0, {R})")
         self.queue.append(req)
+        if self.telemetry is not None:
+            self._enqueue_t[req.rid] = time.perf_counter()
 
     def _pad_batch(self, todo: List[CTRRequest]
                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -357,6 +388,7 @@ class DLRMEngine:
                 # the micro-batch instead of stalling the queue head; the
                 # __init__ floor (cache_rows >= pooling) guarantees a
                 # single request always fits.
+                p0 = time.perf_counter()
                 try:
                     idx = self.cache.prefetch_arrays(idx, lens)
                 except CacheCapacityError:
@@ -364,16 +396,38 @@ class DLRMEngine:
                         raise
                     todo = todo[: len(todo) // 2]
                     continue
+                if self.telemetry is not None:
+                    self.telemetry.tracer.add_span(
+                        f"{self.obs_name}.prefetch", p0, time.perf_counter(),
+                        lane="engine", cat="engine",
+                        args={"engine": self.obs_name, "batch": len(todo)})
                 params = {**self.params, "tables": self.cache.pool}
             break
         batch = JaggedBatch(indices=jnp.asarray(idx),
                             lengths=jnp.asarray(lens))
         t0 = time.perf_counter()
         p = np.asarray(self._fwd(params, jnp.asarray(dense), batch))
+        t1 = time.perf_counter()
         if self.cache is not None:   # same span the pipeline scheduler logs
-            self.cache.stats.add_time("forward", time.perf_counter() - t0)
+            self.cache.stats.add_time("forward", t1 - t0)
+        if self.telemetry is not None:
+            self.telemetry.tracer.add_span(
+                f"{self.obs_name}.forward", t0, t1, lane="engine",
+                cat="engine",
+                args={"engine": self.obs_name, "batch": len(todo)})
         self.queue = self.queue[len(todo):]
+        self._record_scored(todo, t1)
         return {req.rid: float(p[i]) for i, req in enumerate(todo)}
+
+    def _record_scored(self, reqs, t_scored: float) -> None:
+        """Close each scored request's enqueue->score latency span."""
+        if self.telemetry is None:
+            return
+        for req in reqs:
+            t_enq = self._enqueue_t.pop(req.rid, None)
+            if t_enq is not None:
+                self.telemetry.record_request(self.obs_name, req.rid,
+                                              t_enq, t_scored)
 
     def cache_stats(self):
         """The tiered cache's CacheStats (None when the cache is off).
@@ -416,8 +470,11 @@ class PipelinedDLRMEngine(DLRMEngine):
     serialized engine logs, plus the measured ``overlap_s``.
     """
 
+    OBS_NAME = "dlrm_pipelined"
+
     def __init__(self, params, cfg: DLRMConfig, batch_size: int,
-                 ctx: Optional[ParallelContext] = None):
+                 ctx: Optional[ParallelContext] = None, *,
+                 telemetry=None, obs_name: Optional[str] = None):
         if cfg.cache.pipeline_depth < 2:
             raise ValueError(
                 f"PipelinedDLRMEngine needs pipeline_depth >= 2 (got "
@@ -431,8 +488,11 @@ class PipelinedDLRMEngine(DLRMEngine):
                 "tables there is no prefetch stage to overlap")
         from repro.pipeline import PipelineScheduler, PipelineTrace
 
-        super().__init__(params, cfg, batch_size, ctx)
-        self.trace = PipelineTrace()
+        super().__init__(params, cfg, batch_size, ctx,
+                         telemetry=telemetry, obs_name=obs_name)
+        self.trace = PipelineTrace(
+            tracer=None if telemetry is None else telemetry.tracer,
+            label=self.obs_name)
         self.scheduler = PipelineScheduler(
             self.cache, forward=self._pipeline_forward,
             collect=self._pipeline_collect, fallback=self._pipeline_fallback,
@@ -465,6 +525,7 @@ class PipelinedDLRMEngine(DLRMEngine):
 
     def _pipeline_collect(self, payload, host_scores) -> Dict[int, float]:
         todo, _ = payload
+        self._record_scored(todo, time.perf_counter())
         return {req.rid: float(host_scores[i])
                 for i, req in enumerate(todo)}
 
@@ -511,9 +572,14 @@ class PipelinedDLRMEngine(DLRMEngine):
 
 
 def make_dlrm_engine(params, cfg: DLRMConfig, batch_size: int,
-                     ctx: Optional[ParallelContext] = None) -> DLRMEngine:
+                     ctx: Optional[ParallelContext] = None, *,
+                     telemetry=None,
+                     obs_name: Optional[str] = None) -> DLRMEngine:
     """Build the engine ``cfg.cache.pipeline_depth`` selects: 1 =
     serialized :class:`DLRMEngine`, >= 2 = :class:`PipelinedDLRMEngine`
-    over a ``pipeline_depth``-deep double-buffered slot-pool ring."""
+    over a ``pipeline_depth``-deep double-buffered slot-pool ring.
+    ``telemetry``/``obs_name`` thread through to the engine (see
+    :class:`DLRMEngine` — the unified-timeline opt-in)."""
     cls = PipelinedDLRMEngine if cfg.cache.pipeline_depth > 1 else DLRMEngine
-    return cls(params, cfg, batch_size, ctx)
+    return cls(params, cfg, batch_size, ctx, telemetry=telemetry,
+               obs_name=obs_name)

@@ -95,6 +95,39 @@ def fetch_rows_instrumented():
     assert ev[0].axis_size == E
 
 
+def fetch_rows_runtime_timestamps():
+    """RemoteStore.fetch emits a runtime-timestamped fetch_rows event via
+    the process-wide obs sink (jit-trace events carry t0 == t1 == 0.0 and
+    never land on a trace timeline; only the runtime path does)."""
+    from repro.cache import CacheConfig
+    from repro.core.embedding_bag import EmbeddingBagConfig, init_tables, \
+        make_cache
+    from repro.obs import Tracer
+
+    cfg = EmbeddingBagConfig(
+        num_tables=1, rows_per_table=64, dim=8, kernel_mode="reference",
+        cache=CacheConfig(rows=32, cold_tier="remote"))
+    tables = init_tables(jax.random.key(5), cfg)
+    cache = make_cache(tables, cfg)
+    tracer = Tracer()
+    tracer.install_comm_sink()
+    try:
+        b = JaggedBatch(jnp.asarray(np.arange(16).reshape(1, 4, 4),
+                                    dtype=jnp.int32),
+                        jnp.full((1, 4), 4, jnp.int32))
+        cache.lookup(b)
+    finally:
+        tracer.remove_comm_sink()
+    spans = tracer.spans(lane="comm", name="fetch_rows")
+    assert spans, "no fetch_rows event reached the sink"
+    # jit-trace-time events stamp t0 == t1; the runtime path must
+    # contribute at least one span with real duration
+    timed = [s for s in spans if s.t1 > s.t0]
+    assert timed, "no runtime-timestamped fetch_rows span"
+    assert all(s.args["axis_size"] == E and s.args["bytes"] > 0
+               for s in timed)
+
+
 def _exactness(backend, *, batches, cache_rows, cfg_kw, batch_kw):
     cfg = EmbeddingBagConfig(
         cache=CacheConfig(rows=cache_rows, cold_tier="remote",
@@ -233,6 +266,7 @@ def engine_remote_cold_tier():
 def run_all():
     check("fetch_rows_onesided_vs_lax", fetch_rows_onesided_vs_lax)
     check("fetch_rows_instrumented", fetch_rows_instrumented)
+    check("fetch_rows_runtime_timestamps", fetch_rows_runtime_timestamps)
     check("remote_lookup_bitwise_bulk", remote_lookup_bitwise_bulk)
     check("remote_lookup_bitwise_onesided", remote_lookup_bitwise_onesided)
     check("tier_churn_promotion_demotion", tier_churn_promotion_demotion)

@@ -224,18 +224,23 @@ def test_flat_pool_bytes_exact():
 def test_cache_stats_schema():
     d = CacheStats().as_dict()
     assert next(iter(d)) == "schema_version"
-    assert d["schema_version"] == CacheStats.SCHEMA_VERSION == 2
+    assert d["schema_version"] == CacheStats.SCHEMA_VERSION == 3
     assert set(d) == {
         "schema_version", "hits", "misses", "misses_host", "misses_remote",
         "evictions", "bytes_h2d", "bytes_remote", "fetch_host",
-        "fetch_remote", "batches", "hit_rate", "remote_miss_fraction",
-        "hits_t", "misses_t", "evictions_t", "hit_rate_t",
+        "fetch_remote", "batches", "lookups", "hit_rate",
+        "remote_miss_fraction", "hits_t", "misses_t", "evictions_t",
+        "lookups_t", "hit_rate_t",
         "prefetch_s", "scatter_s", "forward_s", "overlap_s",
         "overlap_fraction",
     }
+    # v3: the derived lookups keys are ALWAYS present (lookups_t None
+    # before any per-table update, like the other *_t splits)
+    assert d["lookups"] == 0 and d["lookups_t"] is None
     s = CacheStats()
     s.update(hits=3, misses=1, evictions=0, bytes_h2d=16,
              hits_t=[2, 1], misses_t=[1, 0], evictions_t=[0, 0])
     d = s.as_dict()
     assert d["hits_t"] == [2, 1] and isinstance(d["hits_t"], list)
     assert d["hit_rate_t"] == [round(2 / 3, 4), 1.0]
+    assert d["lookups"] == 4 and d["lookups_t"] == [3, 1]
