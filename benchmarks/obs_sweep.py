@@ -50,6 +50,8 @@ from repro.models import dlrm as dlrm_mod                       # noqa: E402
 from repro.obs import (                                         # noqa: E402
     Histogram, SweepReport, Telemetry, Tracer, validate_chrome_trace,
     write_snapshot)
+from repro.obs.bench import (                                   # noqa: E402
+    make_bench_record, make_metric, write_bench)
 from repro.serving.engine import CTRRequest, make_dlrm_engine   # noqa: E402
 
 SHAPE = dict(tables=4, rows=1 << 12, dim=32, pooling=8, cache=256,
@@ -127,7 +129,8 @@ def _per_op_cost(fn, n: int = 20_000) -> float:
 
 
 def run(shape: dict, windows: dict, trace_path: str, metrics_path: str,
-        csv_path: str | None) -> None:
+        csv_path: str | None, bench_path: str | None = None,
+        smoke: bool = False) -> None:
     tel = Telemetry()
     tel.tracer.install_comm_sink()
     cfg = _config(shape)
@@ -253,6 +256,27 @@ def run(shape: dict, windows: dict, trace_path: str, metrics_path: str,
     if csv_path:
         rep.write(csv_path)
         print(f"wrote {csv_path}")
+    if bench_path:
+        # span/observation counts are pure functions of the serving
+        # shapes; the calibration fit and overhead projection are
+        # wall-clock-shaped, so they ride along as informational
+        h100 = extra["calibration"][H100_DGX.name]
+        record = make_bench_record(
+            "obs", config=dict(shape, smoke=smoke, **windows),
+            metrics={
+                "trace_events": make_metric(
+                    n_events, "1", "higher_is_better", 0.10),
+                "observations": make_metric(
+                    tel.metrics.observation_count, "1",
+                    "higher_is_better", 0.10),
+                "overhead_fraction": make_metric(
+                    frac, "1", "lower_is_better", None),
+                "calib_holdout_err_h100": make_metric(
+                    h100["holdout_err_after"]["total"], "1",
+                    "lower_is_better", None),
+            })
+        write_bench(bench_path, record)
+        print(f"wrote {bench_path}")
 
 
 def main():
@@ -260,11 +284,14 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI shapes: fewer serving windows")
     ap.add_argument("--trace", type=str, default="obs_trace.json")
-    ap.add_argument("--metrics", type=str, default="BENCH_obs.json")
+    ap.add_argument("--metrics", type=str, default="obs_metrics.json",
+                    help="write_snapshot JSON (full registry + calibration)")
     ap.add_argument("--csv", type=str, default=None)
+    ap.add_argument("--bench", type=str, default="BENCH_obs.json",
+                    help="BenchRecord output ('' to skip)")
     args = ap.parse_args()
     run(SHAPE, SMOKE if args.smoke else FULL, args.trace, args.metrics,
-        args.csv)
+        args.csv, bench_path=args.bench or None, smoke=args.smoke)
 
 
 if __name__ == "__main__":

@@ -44,6 +44,7 @@ from repro.core.perf_model import (
 )
 from repro.cache import CacheConfig, HostStore
 from repro.obs import SweepReport
+from repro.obs.bench import make_bench_record, make_metric, write_bench
 from repro.models import dlrm as dlrm_mod
 from repro.serving.engine import CTRRequest, make_dlrm_engine
 
@@ -251,11 +252,14 @@ def main():
     ap.add_argument("--smoke", action="store_true",
                     help="CI shapes: smaller tables, fewer batches")
     ap.add_argument("--csv", type=str, default=None)
+    ap.add_argument("--bench", type=str, default="BENCH_pipeline.json",
+                    help="BenchRecord output ('' to skip)")
     args = ap.parse_args()
 
+    shape = SMOKE if args.smoke else FULL
     rep = SweepReport("sweep", "hosts", "hit_rate", "depth", "platform",
                       "per_batch_us", "recovery")
-    m = measured(SMOKE if args.smoke else FULL)
+    m = measured(shape)
     rep.add(sweep="measured", hosts=1,
             hit_rate=f"{m['hit_rate_piped']:.3f}", depth=1,
             platform="cpu-host",
@@ -270,6 +274,28 @@ def main():
     if args.csv:
         rep.write(args.csv)
         print(f"\nwrote {args.csv}")
+    if args.bench:
+        # hit rates replay deterministically and gate; wall-clock numbers
+        # are CI-host noise, so they ride along as informational
+        record = make_bench_record(
+            "pipeline", config=dict(shape, smoke=args.smoke),
+            metrics={
+                "hit_rate_serial": make_metric(
+                    m["hit_rate_serial"], "1", "higher_is_better", 0.02),
+                "hit_rate_piped": make_metric(
+                    m["hit_rate_piped"], "1", "higher_is_better", 0.02),
+                "piped_wall_ms": make_metric(
+                    m["piped_wall_ms"], "ms", "lower_is_better", None),
+                "serial_span_sum_ms": make_metric(
+                    m["serial_span_sum_ms"], "ms", "lower_is_better", None),
+                "overlap_fraction": make_metric(
+                    m["overlap_fraction"], "1", "higher_is_better", None),
+                "pipeline_speedup": make_metric(
+                    m["serial_span_sum_ms"] / max(m["piped_wall_ms"], 1e-9),
+                    "x", "higher_is_better", None),
+            })
+        write_bench(args.bench, record)
+        print(f"wrote {args.bench}")
 
 
 if __name__ == "__main__":

@@ -91,7 +91,7 @@ PR 6 flattened the slot space and unified the config surface:
 """
 from repro.cache.cached_bag import CachedEmbeddingBag, make_cold_store
 from repro.cache.manager import CacheCapacityError, SlotPoolManager
-from repro.cache.stats import CacheStats
+from repro.cache.stats import CacheStats, CounterDelta
 from repro.cache.tiers import HostStore, RemoteStore, SlotPool, TableStore
 from repro.core.cache_config import CacheConfig
 
@@ -103,6 +103,7 @@ __all__ = [
     "CachedEmbeddingBag",
     "CacheCapacityError",
     "CacheStats",
+    "CounterDelta",
     "HostStore",
     "RemoteStore",
     "SlotPool",

@@ -58,6 +58,28 @@ from typing import Dict, Optional
 import numpy as np
 
 
+@dataclasses.dataclass(frozen=True)
+class CounterDelta:
+    """Hit/miss counter movement between two :meth:`CacheStats.counter_state`
+    snapshots — one serving window's cache traffic (the windowed
+    hit-rate instruments' feed)."""
+
+    hits: int
+    misses: int
+    hits_t: Optional[np.ndarray]
+    misses_t: Optional[np.ndarray]
+
+    @property
+    def lookups(self) -> int:
+        return self.hits + self.misses
+
+    @property
+    def lookups_t(self) -> Optional[np.ndarray]:
+        if self.hits_t is None:
+            return None
+        return self.hits_t + self.misses_t
+
+
 @dataclasses.dataclass
 class CacheStats:
     """Running counters for one :class:`CachedEmbeddingBag`."""
@@ -168,6 +190,28 @@ class CacheStats:
                 self._acc_t(field, values)
         if count_batch:
             self.batches += 1
+
+    def counter_state(self):
+        """Opaque snapshot of the hit/miss counters (totals + per-table)
+        for :meth:`delta_since` — the windowed-metrics pattern is
+        ``state = stats.counter_state()`` at a window boundary, then
+        ``stats.delta_since(state)`` at the next."""
+        return (self.hits, self.misses,
+                None if self.hits_t is None else self.hits_t.copy(),
+                None if self.misses_t is None else self.misses_t.copy())
+
+    def delta_since(self, state) -> CounterDelta:
+        """Counter movement since a :meth:`counter_state` snapshot.
+
+        Per-table deltas are None until the first per-table update; a
+        snapshot taken before that first update deltas against zeros."""
+        h0, m0, ht0, mt0 = state
+        hits_t = misses_t = None
+        if self.hits_t is not None:
+            hits_t = self.hits_t - (0 if ht0 is None else ht0)
+            misses_t = self.misses_t - (0 if mt0 is None else mt0)
+        return CounterDelta(self.hits - h0, self.misses - m0,
+                            hits_t, misses_t)
 
     def reset(self) -> None:
         self.hits = self.misses = self.misses_host = self.misses_remote = 0

@@ -129,6 +129,38 @@ def offsets_from_lengths(lengths: np.ndarray) -> np.ndarray:
 # Synthetic generation (benchmark + test helper)
 # ---------------------------------------------------------------------------
 
+def zipf_ranks(
+    rng: np.random.Generator,
+    a: float,
+    num_rows: int,
+    size,
+) -> np.ndarray:
+    """0-based Zipfian rank samples over exactly ``num_rows`` ids.
+
+    Two regimes, matching ``perf_model.zipf_hit_rate``'s traffic model:
+
+      * ``a > 1`` — numpy's infinite-support zipf sampler, ranks clipped
+        to ``num_rows`` (the rank tail collapses onto the last row);
+      * ``0 < a <= 1`` — the infinite-support zeta diverges (and
+        ``rng.zipf`` refuses it), so ranks are drawn from the TRUNCATED
+        zeta over exactly ``num_rows`` ids via inverse-CDF sampling:
+        ``p_k ∝ k^-a``, k = 1..num_rows.
+
+    Rank 0 is the hottest id — generators that remap popularity to
+    different rows (e.g. the drift workload's hot-set rotation) shift
+    these ranks before using them as row ids.
+    """
+    if a <= 0:
+        raise ValueError(f"zipf_a must be positive, got {a}")
+    if a <= 1.0:
+        pmf = np.arange(1, num_rows + 1, dtype=np.float64) ** -a
+        cdf = np.cumsum(pmf)
+        cdf /= cdf[-1]
+        return np.searchsorted(cdf, rng.random(size))
+    ranks = rng.zipf(a, size=size)
+    return np.minimum(ranks - 1, num_rows - 1)
+
+
 def random_jagged_batch(
     rng: np.random.Generator,
     num_tables: int,
@@ -142,30 +174,14 @@ def random_jagged_batch(
     """Random batch matching the paper's generator (§4.4: uniform random ids).
 
     ``zipf_a`` switches to a Zipfian row-popularity distribution — real CTR
-    traffic is heavily skewed (hot rows), which matters for cache behaviour.
-    Two regimes, matching ``perf_model.zipf_hit_rate``'s traffic model:
-
-      * ``zipf_a > 1`` — numpy's infinite-support zipf sampler, ranks
-        clipped to ``num_rows`` (the rank tail collapses onto the last
-        row);
-      * ``0 < zipf_a <= 1`` — the infinite-support zeta diverges (and
-        ``rng.zipf`` refuses it), so ranks are drawn from the TRUNCATED
-        zeta over exactly ``num_rows`` ids via inverse-CDF sampling:
-        ``p_k ∝ k^-zipf_a``, k = 1..num_rows.
+    traffic is heavily skewed (hot rows), which matters for cache behaviour;
+    see :func:`zipf_ranks` for the two sampling regimes.
     """
     T, B, L = num_tables, batch_size, pooling
     if zipf_a is None:
         idx = rng.integers(0, num_rows, size=(T, B, L), dtype=np.int64)
-    elif zipf_a <= 0:
-        raise ValueError(f"zipf_a must be positive, got {zipf_a}")
-    elif zipf_a <= 1.0:
-        pmf = np.arange(1, num_rows + 1, dtype=np.float64) ** -zipf_a
-        cdf = np.cumsum(pmf)
-        cdf /= cdf[-1]
-        idx = np.searchsorted(cdf, rng.random((T, B, L)))
     else:
-        ranks = rng.zipf(zipf_a, size=(T, B, L))
-        idx = np.minimum(ranks - 1, num_rows - 1)
+        idx = zipf_ranks(rng, zipf_a, num_rows, (T, B, L))
     if fixed_pooling:
         lengths = np.full((T, B), L, dtype=np.int32)
     else:

@@ -15,11 +15,12 @@ import queue
 import threading
 from typing import Dict, Iterator, Optional
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ModelConfig
 from repro.configs.dlrm import DLRMConfig
-from repro.core.jagged import JaggedBatch, random_jagged_batch
+from repro.core.jagged import JaggedBatch, random_jagged_batch, zipf_ranks
 
 
 def lm_batches(cfg: ModelConfig, batch: int, seq: int, *,
@@ -58,6 +59,61 @@ def dlrm_batches(cfg: DLRMConfig, batch: int, *, seed: int = 0,
                 (batch, cfg.num_dense_features)).astype(np.float32),
             "batch": jb,
             "labels": (rng.random(batch) < 0.25).astype(np.float32),
+        }
+        step += 1
+
+
+def dlrm_drift_batches(cfg: DLRMConfig, batch: int, *, seed: int = 0,
+                       start_step: int = 0, zipf_a: float = 1.05,
+                       rotate_every: int = 0,
+                       rotate_shift: Optional[int] = None,
+                       fixed_pooling: bool = True) -> Iterator[Dict]:
+    """Flash-crowd hot-set rotation — the drift detector's test signal.
+
+    Ids are Zipfian ranks shifted by a phase offset that jumps every
+    ``rotate_every`` steps: ``id = (rank + phase * shift) % rows`` with
+    ``phase = step // rotate_every``.  Each jump relocates the ENTIRE
+    popularity ranking (the flash crowd: yesterday's cold rows are
+    suddenly hot), so a cache warmed — and a sharding plan priced — on
+    phase 0's hot set immediately under-serves phase 1, which is
+    exactly the divergence ``repro.obs.slo.DriftDetector`` must flag.
+
+    ``rotate_every=0`` is the STATIONARY control: phase stays 0 and the
+    stream is bitwise identical to the drifting stream's first phase
+    (same (seed, step) rank draws), so a control run isolates the
+    rotation as the only difference.  Determinism contract matches
+    :func:`dlrm_batches`: the batch at step s is a pure function of
+    (seed, s).
+    """
+    if rotate_every < 0:
+        raise ValueError(
+            f"rotate_every must be >= 0 (0 = stationary control), got "
+            f"{rotate_every}")
+    R = cfg.rows_per_table
+    shift = R // 3 if rotate_shift is None else int(rotate_shift)
+    if rotate_every and not 0 < shift < R:
+        raise ValueError(
+            f"rotate_shift must be in (0, {R}) to move the hot set, "
+            f"got {shift}")
+    T, L = cfg.num_sparse_features, cfg.pooling
+    step = start_step
+    while True:
+        rng = np.random.default_rng((seed, step))
+        ranks = zipf_ranks(rng, zipf_a, R, (T, batch, L))
+        phase = 0 if rotate_every == 0 else step // rotate_every
+        idx = (ranks + phase * shift) % R
+        if fixed_pooling:
+            lengths = np.full((T, batch), L, dtype=np.int32)
+        else:
+            lengths = rng.integers(0, L + 1, size=(T, batch),
+                                   dtype=np.int32)
+        yield {
+            "dense": rng.standard_normal(
+                (batch, cfg.num_dense_features)).astype(np.float32),
+            "batch": JaggedBatch(indices=jnp.asarray(idx, jnp.int32),
+                                 lengths=jnp.asarray(lengths)),
+            "labels": (rng.random(batch) < 0.25).astype(np.float32),
+            "phase": phase,
         }
         step += 1
 

@@ -26,14 +26,22 @@ from __future__ import annotations
 import time
 from typing import Optional
 
-from repro.obs.export import SweepReport, write_snapshot
-from repro.obs.metrics import Counter, Gauge, Histogram, MetricsRegistry
+from repro.obs.export import SweepReport, provenance, write_snapshot
+from repro.obs.metrics import (Counter, Gauge, Histogram, LogBuckets,
+                               MetricsRegistry)
+from repro.obs.slo import (DriftDetector, SLOEvent, SLOMonitor, SLOPolicy,
+                           expected_hit_rates)
+from repro.obs.timeseries import (EwmaSeries, RollingCounter,
+                                  WindowedHistogram)
 from repro.obs.trace import LANES, Span, Tracer, validate_chrome_trace
 
 __all__ = [
-    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "Counter", "Gauge", "Histogram", "LogBuckets", "MetricsRegistry",
+    "WindowedHistogram", "RollingCounter", "EwmaSeries",
+    "SLOPolicy", "SLOEvent", "SLOMonitor", "DriftDetector",
+    "expected_hit_rates",
     "LANES", "Span", "Tracer", "validate_chrome_trace",
-    "SweepReport", "write_snapshot", "Telemetry",
+    "SweepReport", "provenance", "write_snapshot", "Telemetry",
 ]
 
 
@@ -44,11 +52,22 @@ class Telemetry:
     request's score materializes — one span on the request lane AND one
     observation in the ``<engine>.request_latency_s`` histogram, so both
     the timeline and the p50/p99 readout see the same interval.
+
+    Windowed time: ``window`` sizes every windowed instrument the
+    engines create (ticks, one per scored micro-batch).  Engines call
+    :meth:`batch_tick` after scoring a micro-batch; the bundle notifies
+    registered listeners (``repro.obs.slo`` monitors — they read the
+    just-completed window) and THEN rotates every windowed instrument
+    under the engine's name prefix, so two engines sharing one bundle
+    never cross-rotate.
     """
 
-    def __init__(self, *, enabled: bool = True):
+    def __init__(self, *, enabled: bool = True, window: int = 32):
         self.metrics = MetricsRegistry()
         self.tracer = Tracer(enabled=enabled)
+        self.window = window
+        self._tick_listeners = []
+        self._ticks: dict = {}
 
     @property
     def enabled(self) -> bool:
@@ -63,6 +82,29 @@ class Telemetry:
         self.metrics.histogram(
             f"{engine}.request_latency_s", unit="s").observe(
                 max(0.0, t_scored - t_enqueue))
+
+    # -- windowed time -------------------------------------------------------
+
+    def add_tick_listener(self, fn) -> None:
+        """Register ``fn(engine, tick)``, called on every
+        :meth:`batch_tick` BEFORE the window rotates (the listener sees
+        the completed window's instruments)."""
+        self._tick_listeners.append(fn)
+
+    def ticks(self, engine: str) -> int:
+        """Micro-batches ticked so far for ``engine``."""
+        return self._ticks.get(engine, 0)
+
+    def batch_tick(self, engine: str) -> int:
+        """One scored micro-batch for ``engine``: notify listeners,
+        then rotate every ``<engine>.``-prefixed windowed instrument;
+        returns the tick count."""
+        k = self._ticks.get(engine, 0) + 1
+        self._ticks[engine] = k
+        for fn in list(self._tick_listeners):
+            fn(engine, k)
+        self.metrics.rotate_windows(prefix=f"{engine}.")
+        return k
 
     def request_latency(self, engine: str):
         """The engine's latency histogram (creates it if unseen)."""

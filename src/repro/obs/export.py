@@ -14,10 +14,42 @@ extras under one top-level schema (the CI obs-smoke step's
 """
 from __future__ import annotations
 
+import datetime
 import json
+import subprocess
 from typing import Dict, List, Optional, Sequence
 
-SNAPSHOT_SCHEMA_VERSION = 1
+# v2: provenance header/section (git sha, UTC timestamp, jax version)
+SNAPSHOT_SCHEMA_VERSION = 2
+
+
+def git_sha(default: str = "unknown") -> str:
+    """The repo's HEAD sha (``default`` outside a checkout / without git)."""
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "HEAD"], capture_output=True, text=True,
+            timeout=10)
+    except (OSError, subprocess.TimeoutExpired):
+        return default
+    sha = out.stdout.strip()
+    return sha if out.returncode == 0 and sha else default
+
+
+def provenance() -> Dict[str, str]:
+    """Who/when/what produced an artifact: git sha, UTC timestamp, jax
+    version — stamped into every sweep CSV and JSON snapshot so
+    artifacts stay attributable across the bench trajectory."""
+    try:
+        import jax
+        jax_version = jax.__version__
+    except Exception:                        # gated import (stub builds)
+        jax_version = "unavailable"
+    return {
+        "git_sha": git_sha(),
+        "timestamp_utc": datetime.datetime.now(
+            datetime.timezone.utc).strftime("%Y-%m-%dT%H:%M:%SZ"),
+        "jax_version": jax_version,
+    }
 
 
 class SweepReport:
@@ -68,7 +100,14 @@ class SweepReport:
         return "\n".join([self.header, *self._lines]) + "\n"
 
     def write(self, path: str) -> str:
+        """Write the CSV with a ``# key: value`` provenance header
+        (git sha, UTC timestamp, jax version) ahead of the column
+        header — comment lines, so every existing CSV consumer that
+        skips ``#`` still parses the file."""
+        prov = provenance()
         with open(path, "w") as f:
+            for k in ("git_sha", "timestamp_utc", "jax_version"):
+                f.write(f"# {k}: {prov[k]}\n")
             f.write(self.csv())
         return path
 
@@ -80,10 +119,12 @@ def write_snapshot(path: str, *, metrics=None,
     ``metrics`` is a :class:`~repro.obs.metrics.MetricsRegistry` (its
     ``snapshot()`` lands under ``"metrics"``); ``extra`` merges in
     sweep-specific results (calibration numbers, assertions' measured
-    values).  Returns ``path``.
+    values).  A ``"provenance"`` section (git sha, UTC timestamp, jax
+    version) is always stamped in.  Returns ``path``.
     """
     payload: Dict[str, object] = {
         "schema_version": SNAPSHOT_SCHEMA_VERSION,
+        "provenance": provenance(),
     }
     if metrics is not None:
         payload["metrics"] = metrics.snapshot()

@@ -65,44 +65,78 @@ class Gauge:
         return {"unit": self.unit, "value": self.value}
 
 
-class Histogram:
-    """Log-bucketed streaming histogram with quantile readout.
+class LogBuckets:
+    """Shared geometric bucket layout for the streaming histograms.
 
     Bucket ``i`` (1-based interior) covers
     ``[lo * 10^((i-1)/bpd), lo * 10^(i/bpd))``; bucket 0 is the
     underflow sink (``v <= lo``) and the last bucket the overflow sink.
-    ``quantile`` walks the cumulative counts and returns the target
-    bucket's geometric midpoint, clamped into the observed ``[min, max]``
-    — so the tails never report values that were never seen.
+    :class:`Histogram` (cumulative) and
+    :class:`repro.obs.timeseries.WindowedHistogram` (ring-buffered) use
+    the SAME layout and the SAME quantile walk, so a windowed quantile
+    is exactly the cumulative quantile of the window's observations —
+    the brute-force property the timeseries tests pin.
     """
 
-    __slots__ = ("name", "unit", "_lo", "_bpd", "_log_lo", "_counts",
+    __slots__ = ("lo", "bpd", "_log_lo", "n")
+
+    def __init__(self, lo: float = 1e-7, hi: float = 1e4,
+                 buckets_per_decade: int = 10):
+        if lo <= 0 or hi <= lo:
+            raise ValueError(f"need 0 < lo < hi, got lo={lo}, hi={hi}")
+        self.lo, self.bpd = lo, buckets_per_decade
+        self._log_lo = math.log10(lo)
+        interior = int(math.ceil((math.log10(hi) - self._log_lo)
+                                 * buckets_per_decade))
+        self.n = interior + 2               # + underflow + overflow
+
+    def index(self, v: float) -> int:
+        if v <= self.lo:
+            return 0
+        i = 1 + int((math.log10(v) - self._log_lo) * self.bpd)
+        return min(i, self.n - 1)
+
+    def edge(self, i: int) -> float:
+        """Left edge of interior bucket ``i`` (1-based)."""
+        return self.lo * 10.0 ** ((i - 1) / self.bpd)
+
+    def quantile(self, counts, count: int, q: float, vmin: float,
+                 vmax: float) -> float:
+        """Cumulative walk over ``counts``; the target bucket reports
+        its geometric midpoint clamped into the observed ``[vmin, vmax]``
+        — so the tails never report values that were never seen."""
+        if count == 0:
+            return 0.0
+        target = q * count
+        cum = 0
+        for i, c in enumerate(counts):
+            cum += c
+            if cum >= target and c:
+                if i == 0:
+                    return vmin
+                if i == self.n - 1:
+                    return vmax
+                mid = self.edge(i) * 10.0 ** (0.5 / self.bpd)
+                return min(max(mid, vmin), vmax)
+        return vmax
+
+
+class Histogram:
+    """Log-bucketed streaming histogram with quantile readout (see
+    :class:`LogBuckets` for the bucket/quantile contract)."""
+
+    __slots__ = ("name", "unit", "_b", "_counts",
                  "count", "total", "min", "max")
 
     def __init__(self, name: str, unit: str = "s", *, lo: float = 1e-7,
                  hi: float = 1e4, buckets_per_decade: int = 10):
-        if lo <= 0 or hi <= lo:
-            raise ValueError(f"need 0 < lo < hi, got lo={lo}, hi={hi}")
         self.name, self.unit = name, unit
-        self._lo, self._bpd = lo, buckets_per_decade
-        self._log_lo = math.log10(lo)
-        n = int(math.ceil((math.log10(hi) - self._log_lo)
-                          * buckets_per_decade))
-        self._counts = [0] * (n + 2)        # + underflow + overflow
+        self._b = LogBuckets(lo, hi, buckets_per_decade)
+        self._counts = [0] * self._b.n
         self.count = 0
         self.total = 0.0
         self.min = math.inf
         self.max = -math.inf
-
-    def _bucket(self, v: float) -> int:
-        if v <= self._lo:
-            return 0
-        i = 1 + int((math.log10(v) - self._log_lo) * self._bpd)
-        return min(i, len(self._counts) - 1)
-
-    def _edge(self, i: int) -> float:
-        """Left edge of interior bucket ``i`` (1-based)."""
-        return self._lo * 10.0 ** ((i - 1) / self._bpd)
 
     def observe(self, v: float) -> None:
         v = float(v)
@@ -110,7 +144,7 @@ class Histogram:
             raise ValueError(
                 f"histogram {self.name!r}: need a finite value >= 0, "
                 f"got {v}")
-        self._counts[self._bucket(v)] += 1
+        self._counts[self._b.index(v)] += 1
         self.count += 1
         self.total += v
         self.min = min(self.min, v)
@@ -120,20 +154,8 @@ class Histogram:
         """q in [0, 1] -> value estimate (0.0 on an empty histogram)."""
         if not 0.0 <= q <= 1.0:
             raise ValueError(f"quantile must be in [0, 1], got {q}")
-        if self.count == 0:
-            return 0.0
-        target = q * self.count
-        cum = 0
-        for i, c in enumerate(self._counts):
-            cum += c
-            if cum >= target and c:
-                if i == 0:
-                    return self.min
-                if i == len(self._counts) - 1:
-                    return self.max
-                mid = self._edge(i) * 10.0 ** (0.5 / self._bpd)
-                return min(max(mid, self.min), self.max)
-        return self.max
+        return self._b.quantile(self._counts, self.count, q,
+                                self.min, self.max)
 
     @property
     def p50(self) -> float:
@@ -166,16 +188,31 @@ class Histogram:
 
 
 class MetricsRegistry:
-    """Get-or-create instrument namespace with a versioned snapshot."""
+    """Get-or-create instrument namespace with a versioned snapshot.
+
+    Beyond the cumulative instruments above, the registry hosts the
+    WINDOWED kinds from :mod:`repro.obs.timeseries` — ring-buffered
+    histograms/counters whose readout covers only the last ``window``
+    ticks, and per-element EWMA series.  ``rotate_windows(prefix)``
+    advances every windowed instrument under a name prefix by one tick
+    — engines call it once per scored micro-batch
+    (:meth:`repro.obs.Telemetry.batch_tick`), scoped by their
+    ``<obs_name>.`` prefix so two engines sharing one registry never
+    cross-rotate each other's windows.
+    """
 
     # bump when snapshot() keys change meaning or spelling — BENCH_obs.json
-    # and the CI obs-smoke artifact key off this contract
-    SCHEMA_VERSION = 1
+    # and the CI obs-smoke artifact key off this contract.
+    # v2: windowed/rolling/ewma sections (repro.obs.timeseries)
+    SCHEMA_VERSION = 2
 
     def __init__(self):
         self._counters: Dict[str, Counter] = {}
         self._gauges: Dict[str, Gauge] = {}
         self._histograms: Dict[str, Histogram] = {}
+        self._windowed: Dict[str, object] = {}
+        self._rolling: Dict[str, object] = {}
+        self._ewma: Dict[str, object] = {}
         self._producers: Dict[str, Callable[[], Dict]] = {}
 
     def _get(self, table: Dict, cls, name: str, unit: str, **kw):
@@ -200,6 +237,56 @@ class MetricsRegistry:
         return self._get(self._histograms, Histogram, name, unit, lo=lo,
                          hi=hi, buckets_per_decade=buckets_per_decade)
 
+    # -- windowed instruments (repro.obs.timeseries) -------------------------
+
+    def windowed_histogram(self, name: str, unit: str = "s", *,
+                           window: int = 32, lo: float = 1e-7,
+                           hi: float = 1e4, buckets_per_decade: int = 10):
+        from repro.obs.timeseries import WindowedHistogram
+
+        inst = self._get(self._windowed, WindowedHistogram, name, unit,
+                         window=window, lo=lo, hi=hi,
+                         buckets_per_decade=buckets_per_decade)
+        if inst.window != window:
+            raise ValueError(
+                f"WindowedHistogram {name!r} already registered with "
+                f"window {inst.window} (asked for {window})")
+        return inst
+
+    def rolling_counter(self, name: str, unit: str = "1", *,
+                        window: int = 32):
+        from repro.obs.timeseries import RollingCounter
+
+        inst = self._get(self._rolling, RollingCounter, name, unit,
+                         window=window)
+        if inst.window != window:
+            raise ValueError(
+                f"RollingCounter {name!r} already registered with "
+                f"window {inst.window} (asked for {window})")
+        return inst
+
+    def ewma(self, name: str, unit: str = "1", *, alpha: float = 0.25):
+        from repro.obs.timeseries import EwmaSeries
+
+        inst = self._get(self._ewma, EwmaSeries, name, unit, alpha=alpha)
+        if inst.alpha != alpha:
+            raise ValueError(
+                f"EwmaSeries {name!r} already registered with alpha "
+                f"{inst.alpha} (asked for {alpha})")
+        return inst
+
+    def rotate_windows(self, prefix: str = "") -> int:
+        """Advance every windowed instrument whose name starts with
+        ``prefix`` by one tick (EWMA series are time-decayed, not
+        windowed — they never rotate); returns the number rotated."""
+        n = 0
+        for table in (self._windowed, self._rolling):
+            for name, inst in table.items():
+                if name.startswith(prefix):
+                    inst.rotate()
+                    n += 1
+        return n
+
     def register_producer(self, prefix: str, fn: Callable[[], Dict], *,
                           replace: bool = False) -> None:
         """Attach an external stats source (e.g. ``CacheStats.as_dict``);
@@ -217,6 +304,25 @@ class MetricsRegistry:
         """Total histogram observations (the overhead model's op count)."""
         return sum(h.count for h in self._histograms.values())
 
+    def windowed_op_counts(self) -> Dict[str, int]:
+        """Lifetime op counts of the windowed instruments, split by kind
+        — the inputs of the overhead projection (benchmarks/slo_sweep.py
+        multiplies each by a microbenchmarked per-op cost):
+
+          * ``observe`` — WindowedHistogram observations;
+          * ``inc``     — RollingCounter increments;
+          * ``rotate``  — window rotations across both windowed kinds;
+          * ``ewma``    — per-ELEMENT EwmaSeries updates.
+        """
+        return {
+            "observe": sum(w.lifetime_count
+                           for w in self._windowed.values()),
+            "inc": sum(c.ops for c in self._rolling.values()),
+            "rotate": (sum(w.rotations for w in self._windowed.values())
+                       + sum(c.rotations for c in self._rolling.values())),
+            "ewma": sum(e.update_ops for e in self._ewma.values()),
+        }
+
     def snapshot(self) -> Dict[str, object]:
         """One stable, JSON-serializable view of every instrument."""
         return {
@@ -227,6 +333,12 @@ class MetricsRegistry:
                        for k, v in sorted(self._gauges.items())},
             "histograms": {k: v.to_dict()
                            for k, v in sorted(self._histograms.items())},
+            "windowed": {k: v.to_dict()
+                         for k, v in sorted(self._windowed.items())},
+            "rolling": {k: v.to_dict()
+                        for k, v in sorted(self._rolling.items())},
+            "ewma": {k: v.to_dict()
+                     for k, v in sorted(self._ewma.items())},
             "producers": {k: fn()
                           for k, fn in sorted(self._producers.items())},
         }

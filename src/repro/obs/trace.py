@@ -21,6 +21,8 @@ Lanes (Chrome ``tid``s inside one ``pid``):
   cache    ``CachedEmbeddingBag`` admit/fetch/scatter spans (bytes in
            ``args``)
   comm     timestamped ``CollectiveEvent``s (``comm.fetch_rows`` etc.)
+  slo      zero-duration SLO breach / drift events from
+           ``repro.obs.slo`` (the structured event dict in ``args``)
   ======== ===========================================================
 
 Export schema: every event is a complete-event (``ph: "X"``) or
@@ -54,6 +56,7 @@ LANES: Dict[str, int] = {
     "request": 2,
     "cache": 3,
     "comm": 4,
+    "slo": 5,
 }
 
 

@@ -79,12 +79,21 @@ class PipelineTrace:
     unified timeline's pipeline lane as ``pipeline.<stage>``, tagged
     with the owning engine's ``label`` — one merged view across the
     serialized and pipelined engines.
+
+    With a ``metrics`` registry (:class:`repro.obs.MetricsRegistry`)
+    every span additionally feeds a per-stage WINDOWED histogram
+    ``<label>.stage.<stage>_s`` — the live per-stage latency readout.
+    The engine passes ``label=obs_name``, so the names sit under the
+    engine's prefix and rotate with its ``batch_tick``.
     """
 
-    def __init__(self, tracer=None, label: str = "pipeline"):
+    def __init__(self, tracer=None, label: str = "pipeline",
+                 metrics=None, window: int = 32):
         self.spans: List[StageSpan] = []
         self.tracer = tracer
         self.label = label
+        self.metrics = metrics
+        self.window = window
 
     def record(self, stage: str, batch: int, start: float,
                end: float) -> None:
@@ -95,6 +104,10 @@ class PipelineTrace:
             self.tracer.add_span(
                 f"pipeline.{stage}", start, end, lane="pipeline",
                 cat="pipeline", args={"engine": self.label, "batch": batch})
+        if self.metrics is not None:
+            self.metrics.windowed_histogram(
+                f"{self.label}.stage.{stage}_s", unit="s",
+                window=self.window).observe(max(0.0, end - start))
 
     def by_stage(self, stage: str) -> List[StageSpan]:
         return [s for s in self.spans if s.stage == stage]

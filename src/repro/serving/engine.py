@@ -251,6 +251,14 @@ class DLRMEngine:
         # pipeline failure's requeued requests keep their ORIGINAL stamps
         # (latency measures from first submit, not the retry)
         self._enqueue_t: Dict[int, float] = {}
+        # rid -> dequeue stamp (the micro-batch carve) — splits each
+        # request's latency into queue-wait vs service time; a capacity
+        # split's survivors are re-stamped at their NEXT carve, so the
+        # split point always reflects the flush that actually scored
+        self._dequeue_t: Dict[int, float] = {}
+        # cache counter snapshot at the last batch tick (windowed
+        # hit-rate deltas); None until the cache exists
+        self._cache_counter_state = None
 
         self.cache = None
         if cfg.cache.enabled or cfg.sharding_plan is not None:
@@ -294,6 +302,8 @@ class DLRMEngine:
                 self.telemetry.metrics.register_producer(
                     f"{self.obs_name}.cache", self.cache.stats.as_dict,
                     replace=True)
+                self._cache_counter_state = \
+                    self.cache.stats.counter_state()
 
         def fwd(p, dense, batch):
             return jax.nn.sigmoid(
@@ -351,6 +361,8 @@ class DLRMEngine:
         self.queue.append(req)
         if self.telemetry is not None:
             self._enqueue_t[req.rid] = time.perf_counter()
+            self.telemetry.metrics.gauge(
+                f"{self.obs_name}.queue_depth").set(len(self.queue))
 
     def _pad_batch(self, todo: List[CTRRequest]
                    ) -> Tuple[np.ndarray, np.ndarray, np.ndarray]:
@@ -375,6 +387,7 @@ class DLRMEngine:
         # peek, don't pop: the cached path's prefetch can refuse the batch
         # (working set over the slot pool) and the requests must survive
         todo = self.queue[: self.batch_size]
+        self._stamp_dequeue(todo)
         if self.cache is not None:
             from repro.cache import CacheCapacityError
 
@@ -419,15 +432,78 @@ class DLRMEngine:
         self._record_scored(todo, t1)
         return {req.rid: float(p[i]) for i, req in enumerate(todo)}
 
+    def _stamp_dequeue(self, todo) -> None:
+        """Stamp each carved request's dequeue time (the queue-wait vs
+        service-time split point) and sample the queue depth into the
+        gauge + windowed histogram."""
+        if self.telemetry is None or not todo:
+            return
+        t = time.perf_counter()
+        for req in todo:
+            self._dequeue_t[req.rid] = t
+        m = self.telemetry.metrics
+        depth = len(self.queue)
+        m.gauge(f"{self.obs_name}.queue_depth").set(depth)
+        m.windowed_histogram(
+            f"{self.obs_name}.queue_depth", unit="1",
+            window=self.telemetry.window, lo=0.5, hi=1e7,
+            buckets_per_decade=5).observe(depth)
+
+    def _observe_cache_window(self) -> None:
+        """Fold this micro-batch's cache counter movement into the
+        windowed hit-rate instruments: rolling window hits/lookups
+        (their ratio = the windowed hit rate the SLO monitor reads) and
+        the per-table EWMA ``hit_rate_t`` (the drift detector's
+        measured side).  Under the pipelined engine the next batch's
+        prefetch may already have landed when batch k is collected —
+        one batch of attribution skew, bounded by the pipeline depth."""
+        if self.cache is None:
+            return
+        stats = self.cache.stats
+        delta = stats.delta_since(self._cache_counter_state)
+        self._cache_counter_state = stats.counter_state()
+        if delta.lookups == 0:
+            return
+        m = self.telemetry.metrics
+        w = self.telemetry.window
+        m.rolling_counter(f"{self.obs_name}.window.hits",
+                          window=w).inc(delta.hits)
+        m.rolling_counter(f"{self.obs_name}.window.lookups",
+                          window=w).inc(delta.lookups)
+        lt = delta.lookups_t
+        if lt is not None:
+            mask = lt > 0
+            rate = np.where(mask, delta.hits_t / np.maximum(lt, 1), 0.0)
+            m.ewma(f"{self.obs_name}.hit_rate_t").update(rate, mask=mask)
+
     def _record_scored(self, reqs, t_scored: float) -> None:
-        """Close each scored request's enqueue->score latency span."""
+        """Close each scored request's enqueue->score latency span,
+        feed the windowed instruments, and tick the window over: one
+        scored micro-batch = one tick (SLO listeners fire, then the
+        engine's windows rotate)."""
         if self.telemetry is None:
             return
+        m = self.telemetry.metrics
+        w = self.telemetry.window
+        lat = m.windowed_histogram(f"{self.obs_name}.request_latency_s",
+                                   unit="s", window=w)
+        wait = m.windowed_histogram(f"{self.obs_name}.queue_wait_s",
+                                    unit="s", window=w)
+        service = m.windowed_histogram(f"{self.obs_name}.service_s",
+                                       unit="s", window=w)
         for req in reqs:
             t_enq = self._enqueue_t.pop(req.rid, None)
-            if t_enq is not None:
-                self.telemetry.record_request(self.obs_name, req.rid,
-                                              t_enq, t_scored)
+            if t_enq is None:
+                continue
+            self.telemetry.record_request(self.obs_name, req.rid,
+                                          t_enq, t_scored)
+            lat.observe(max(0.0, t_scored - t_enq))
+            t_deq = self._dequeue_t.pop(req.rid, None)
+            if t_deq is not None:
+                wait.observe(max(0.0, t_deq - t_enq))
+                service.observe(max(0.0, t_scored - t_deq))
+        self._observe_cache_window()
+        self.telemetry.batch_tick(self.obs_name)
 
     def cache_stats(self):
         """The tiered cache's CacheStats (None when the cache is off).
@@ -492,7 +568,9 @@ class PipelinedDLRMEngine(DLRMEngine):
                          telemetry=telemetry, obs_name=obs_name)
         self.trace = PipelineTrace(
             tracer=None if telemetry is None else telemetry.tracer,
-            label=self.obs_name)
+            label=self.obs_name,
+            metrics=None if telemetry is None else telemetry.metrics,
+            window=32 if telemetry is None else telemetry.window)
         self.scheduler = PipelineScheduler(
             self.cache, forward=self._pipeline_forward,
             collect=self._pipeline_collect, fallback=self._pipeline_fallback,
@@ -558,6 +636,7 @@ class PipelinedDLRMEngine(DLRMEngine):
         batches, submitted = [], []
         while self.queue:
             todo = self.queue[: self.batch_size]
+            self._stamp_dequeue(todo)
             self.queue = self.queue[len(todo):]
             submitted.extend(todo)
             dense, idx, lens = self._pad_batch(todo)

@@ -80,12 +80,20 @@ def test_metrics_registry_snapshot_schema():
     m.histogram("lat", unit="s").observe(0.01)
     m.register_producer("cache", lambda: {"hits": 7})
     snap = m.snapshot()
-    assert snap["schema_version"] == MetricsRegistry.SCHEMA_VERSION
+    assert snap["schema_version"] == MetricsRegistry.SCHEMA_VERSION == 2
     assert set(snap) == {"schema_version", "counters", "gauges",
-                         "histograms", "producers"}
+                         "histograms", "windowed", "rolling", "ewma",
+                         "producers"}
     assert snap["counters"]["bytes"] == {"unit": "B", "value": 128}
     assert snap["producers"]["cache"] == {"hits": 7}
     assert snap["histograms"]["lat"]["count"] == 1
+    # v2 pins the histogram payload: sum/min/max make mean + extremes
+    # recoverable from a snapshot alone
+    assert set(snap["histograms"]["lat"]) == {
+        "unit", "count", "sum", "min", "max", "mean", "p50", "p95", "p99"}
+    assert snap["histograms"]["lat"]["sum"] == pytest.approx(0.01)
+    assert snap["histograms"]["lat"]["min"] == pytest.approx(0.01)
+    assert snap["histograms"]["lat"]["max"] == pytest.approx(0.01)
     json.dumps(snap)                     # snapshot must be JSON-clean
     # get-or-create is idempotent; a unit mismatch is a bug, not a merge
     assert m.counter("bytes", unit="B").value == 128
@@ -478,7 +486,12 @@ def test_sweep_report_validates_columns(tmp_path):
     with pytest.raises(ValueError, match="at least one"):
         SweepReport()
     path = rep.write(str(tmp_path / "out.csv"))
-    assert open(path).read() == rep.csv()
+    text = open(path).read()
+    # a provenance header (comment lines) precedes the verbatim CSV
+    header, body = text.split("# jax_version:", 1)
+    assert header.startswith("# git_sha:")
+    assert "# timestamp_utc:" in header
+    assert body.split("\n", 1)[1] == rep.csv()
 
 
 def test_write_snapshot(tmp_path):
@@ -488,6 +501,8 @@ def test_write_snapshot(tmp_path):
                           extra={"calibration": {"host_Bps": 1e8}})
     with open(path) as f:
         got = json.load(f)
-    assert got["schema_version"] == 1
+    assert got["schema_version"] == 2
+    assert set(got["provenance"]) == {"git_sha", "timestamp_utc",
+                                      "jax_version"}
     assert got["metrics"]["histograms"]["lat"]["count"] == 1
     assert got["calibration"] == {"host_Bps": 1e8}

@@ -1,0 +1,387 @@
+"""SLO monitoring, drift detection, and the BenchRecord perf gate.
+
+Unit tests drive :class:`SLOMonitor` / :class:`DriftDetector` over
+hand-fed windowed instruments (breach-event schema, evidence gating,
+transition-only drift firing); engine-integration tests attach both to a
+real serving run and check the slo tracer lane; the bench section pins
+every ``compare_bench`` verdict and the CLI's bless/compare round trip.
+"""
+import dataclasses
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.cache import CacheConfig
+from repro.configs import dlrm as dlrm_cfg
+from repro.core.perf_model import H100_DGX
+from repro.core.sharding_plan import TableSpec, plan
+from repro.models import dlrm as dlrm_mod
+from repro.obs import (
+    LANES,
+    DriftDetector,
+    SLOMonitor,
+    SLOPolicy,
+    Telemetry,
+    expected_hit_rates,
+)
+from repro.obs.bench import (
+    compare_bench,
+    config_hash,
+    load_bench,
+    make_bench_record,
+    make_metric,
+    write_bench,
+)
+from repro.obs.bench import main as bench_main
+from repro.obs.slo import SLO_EVENT_SCHEMA_VERSION, SLOEvent
+from repro.serving.engine import CTRRequest, make_dlrm_engine
+
+
+# ---------------------------------------------------------------------------
+# SLOMonitor: breach events, schema, evidence gating
+# ---------------------------------------------------------------------------
+
+def _feed_window(tel, engine="dlrm", *, latencies=(), hits=0, lookups=0,
+                 depth=None):
+    m = tel.metrics
+    w = tel.window
+    for v in latencies:
+        m.windowed_histogram(f"{engine}.request_latency_s", unit="s",
+                             window=w).observe(v)
+    if lookups:
+        m.rolling_counter(f"{engine}.window.hits", window=w).inc(hits)
+        m.rolling_counter(f"{engine}.window.lookups", window=w).inc(lookups)
+    if depth is not None:
+        m.windowed_histogram(f"{engine}.queue_depth", unit="1", window=w,
+                             lo=0.5, hi=1e7,
+                             buckets_per_decade=5).observe(depth)
+
+
+def test_monitor_emits_structured_breach_events():
+    tel = Telemetry(window=4)
+    pol = SLOPolicy(name="tight", p99_budget_s=1e-3, hit_rate_floor=0.9,
+                    queue_depth_cap=10)
+    mon = SLOMonitor(tel, pol)
+    _feed_window(tel, latencies=[5e-3, 6e-3], hits=5, lookups=10, depth=64)
+    tel.batch_tick("dlrm")
+    assert mon.windows_evaluated == 1
+    assert mon.breaches == 3
+    assert mon.summary()["breaches_by_rule"] == \
+        {"p99": 1, "hit_rate": 1, "queue_depth": 1}
+    ev = mon.events[0]
+    d = ev.to_dict()
+    assert d["schema_version"] == SLO_EVENT_SCHEMA_VERSION
+    assert set(d) == {"schema_version", "kind", "rule", "tick", "engine",
+                      "measured", "threshold"}
+    assert d["kind"] == "breach" and d["tick"] == 1
+    # every breach mirrored onto the dedicated slo tracer lane
+    spans = tel.tracer.spans(lane="slo")
+    assert {s.name for s in spans} == \
+        {"slo.p99", "slo.hit_rate", "slo.queue_depth"}
+    assert all(s.args["schema_version"] == SLO_EVENT_SCHEMA_VERSION
+               for s in spans)
+    assert "slo" in LANES
+
+
+def test_monitor_quiet_when_inside_budget():
+    tel = Telemetry(window=4)
+    mon = SLOMonitor(tel, SLOPolicy(p99_budget_s=1.0, hit_rate_floor=0.2,
+                                    queue_depth_cap=100))
+    for _ in range(3):
+        _feed_window(tel, latencies=[1e-3], hits=9, lookups=10, depth=2)
+        tel.batch_tick("dlrm")
+    assert mon.windows_evaluated == 3 and mon.breaches == 0
+    assert mon.worst_p99_s == pytest.approx(1e-3)
+    assert not tel.tracer.spans(lane="slo")
+
+
+def test_monitor_evidence_gating_skips_thin_windows():
+    tel = Telemetry(window=4)
+    pol = SLOPolicy(p99_budget_s=1e-6, hit_rate_floor=0.99,
+                    min_window_count=5, min_window_lookups=100)
+    mon = SLOMonitor(tel, pol)
+    # 2 observations < min_window_count, 10 lookups < min_window_lookups:
+    # both rules would breach on the values, but the evidence floor skips
+    _feed_window(tel, latencies=[1.0, 1.0], hits=0, lookups=10)
+    tel.batch_tick("dlrm")
+    assert mon.windows_evaluated == 1 and mon.breaches == 0
+
+
+def test_monitor_stride_and_engine_scoping():
+    tel = Telemetry(window=4)
+    mon = SLOMonitor(tel, SLOPolicy(p99_budget_s=1e-6), stride=2)
+    other = SLOMonitor(tel, SLOPolicy(p99_budget_s=1e-6), engine="other")
+    for _ in range(4):
+        _feed_window(tel, latencies=[1.0])
+        tel.batch_tick("dlrm")
+    assert mon.windows_evaluated == 2     # ticks 2 and 4 only
+    assert other.windows_evaluated == 0   # different engine, never fires
+    with pytest.raises(ValueError):
+        SLOMonitor(tel, SLOPolicy(), stride=0)
+
+
+# ---------------------------------------------------------------------------
+# DriftDetector: transition firing, re-arm, plan wiring
+# ---------------------------------------------------------------------------
+
+def _feed_hit_rate(tel, rates, engine="dlrm"):
+    rates = np.asarray(rates, np.float64)
+    tel.metrics.ewma(f"{engine}.hit_rate_t").update(rates,
+                                                    mask=rates >= 0)
+
+
+def test_drift_fires_on_transition_only_and_rearms():
+    tel = Telemetry(window=4)
+    det = DriftDetector(tel, [0.9, 0.9], threshold=0.2, min_updates=2)
+    alpha = tel.metrics.ewma("dlrm.hit_rate_t").alpha
+    assert alpha == 0.25
+    # converge near the expectation first (also satisfies min_updates)
+    for _ in range(3):
+        _feed_hit_rate(tel, [0.9, 0.9])
+        tel.batch_tick("dlrm")
+    assert det.events == [] and det.first_detection_tick is None
+    # table 0 craters; EWMA needs a couple of updates to cross 0.2 dev
+    ticks_to_fire = 0
+    while not det.events:
+        _feed_hit_rate(tel, [0.0, 0.9])
+        ticks_to_fire += 1
+        assert ticks_to_fire < 10, "detector never fired"
+        tel.batch_tick("dlrm")
+    assert det.first_detection_tick == 3 + ticks_to_fire
+    ev = det.events[0]
+    assert ev.kind == "drift" and ev.rule == "hit_rate_drift"
+    assert ev.table == 0 and ev.expected == pytest.approx(0.9)
+    assert ev.to_dict()["expected"] == pytest.approx(0.9)
+    # persistently drifted: NO further events for the same table
+    for _ in range(3):
+        _feed_hit_rate(tel, [0.0, 0.9])
+        tel.batch_tick("dlrm")
+    assert len(det.events) == 1
+    assert tel.tracer.spans(lane="slo", name="slo.hit_rate_drift")
+    # recovery re-arms: drifting again fires a SECOND event
+    while 0 in det.drifted:
+        _feed_hit_rate(tel, [0.9, 0.9])
+        tel.batch_tick("dlrm")
+    for _ in range(10):
+        _feed_hit_rate(tel, [0.0, 0.9])
+        tel.batch_tick("dlrm")
+        if len(det.events) == 2:
+            break
+    assert len(det.events) == 2
+    assert det.summary()["tables_drifted"] == [0, 0]
+
+
+def test_drift_requires_min_updates_of_evidence():
+    tel = Telemetry(window=4)
+    det = DriftDetector(tel, [0.9], threshold=0.1, min_updates=3)
+    for k in range(1, 5):
+        _feed_hit_rate(tel, [0.0])
+        tel.batch_tick("dlrm")
+        if k < 3:
+            assert not det.events, f"fired with only {k} updates"
+    assert det.events and det.first_detection_tick == 3
+
+
+def test_drift_shape_mismatch_raises():
+    tel = Telemetry(window=4)
+    DriftDetector(tel, [0.9, 0.9, 0.9])
+    _feed_hit_rate(tel, [0.5, 0.5])       # 2 tables measured, 3 expected
+    with pytest.raises(ValueError, match="shape"):
+        tel.batch_tick("dlrm")
+
+
+def test_expected_hit_rates_from_plan():
+    specs = [TableSpec(f"t{i}", rows=2048, dim=16, pooling=8)
+             for i in range(6)]
+    p = plan(specs, num_shards=2, batch_per_shard=8,
+             hbm_budget_bytes=48_000, hw=H100_DGX, zipf_a=0.9)
+    exp = expected_hit_rates(p, len(specs))
+    assert exp.shape == (6,)
+    for pl in p.placements:
+        if pl.strategy == "cached" and pl.cache_rows > 0:
+            assert exp[pl.index] == pytest.approx(pl.est_hit_rate)
+            assert 0.0 < exp[pl.index] < 1.0
+
+
+# ---------------------------------------------------------------------------
+# Engine integration: live windowed instruments feed monitor + detector
+# ---------------------------------------------------------------------------
+
+def _smoke_cfg(depth=1):
+    return dataclasses.replace(
+        dlrm_cfg.smoke(), kernel_mode="reference",
+        cache=CacheConfig(rows=32, pipeline_depth=depth))
+
+
+def _zipf_requests(cfg, n, rng, rid0=0):
+    T, L, F = (cfg.num_sparse_features, cfg.pooling,
+               cfg.num_dense_features)
+    R = cfg.rows_per_table
+    return [CTRRequest(
+        rid=rid, dense=rng.standard_normal(F).astype(np.float32),
+        indices=np.minimum(rng.zipf(1.2, size=(T, L)) - 1,
+                           R - 1).astype(np.int32),
+        lengths=np.full(T, L, np.int32))
+        for rid in range(rid0, rid0 + n)]
+
+
+@pytest.mark.parametrize("depth", [1, 2])
+def test_engine_feeds_monitor_and_detector(depth):
+    cfg = _smoke_cfg(depth)
+    params = dlrm_mod.init_params(jax.random.key(0), cfg)
+    tel = Telemetry(window=4)
+    eng = make_dlrm_engine(params, cfg, batch_size=4, telemetry=tel)
+    # impossible latency budget -> every evaluated window breaches, and
+    # a huge drift threshold -> the detector sees updates but stays quiet
+    mon = SLOMonitor(tel, SLOPolicy(p99_budget_s=1e-12),
+                     engine=eng.obs_name)
+    det = DriftDetector(tel, np.ones(cfg.num_sparse_features),
+                        engine=eng.obs_name, threshold=2.0)
+    rng = np.random.default_rng(1)
+    for r in _zipf_requests(cfg, 12, rng):
+        eng.submit(r)
+    eng.run_to_completion()
+    n_flushes = 3                         # ceil(12 / 4)
+    assert tel.ticks(eng.obs_name) == n_flushes
+    assert mon.windows_evaluated == n_flushes
+    assert mon.summary()["breaches_by_rule"]["p99"] == n_flushes
+    assert not det.events
+    ew = tel.metrics.ewma(f"{eng.obs_name}.hit_rate_t")
+    assert ew.get() is not None and int(ew.updates.max()) >= 1
+    # the windowed hit-rate feed matches the cumulative cache counters
+    m = tel.metrics
+    hits = m.rolling_counter(f"{eng.obs_name}.window.hits",
+                             window=tel.window)
+    lookups = m.rolling_counter(f"{eng.obs_name}.window.lookups",
+                                window=tel.window)
+    assert hits.lifetime_total == eng.cache_stats().hits
+    assert lookups.lifetime_total == eng.cache_stats().lookups
+    # queue-wait + service windowed splits observed per request
+    lat = m.windowed_histogram(f"{eng.obs_name}.request_latency_s",
+                               unit="s", window=tel.window)
+    assert lat.lifetime_count == 12
+
+
+def test_pipelined_engine_records_stage_windows():
+    cfg = _smoke_cfg(depth=2)
+    params = dlrm_mod.init_params(jax.random.key(3), cfg)
+    tel = Telemetry(window=4)
+    piped = make_dlrm_engine(params, cfg, batch_size=4, telemetry=tel)
+    rng = np.random.default_rng(4)
+    for r in _zipf_requests(cfg, 8, rng):
+        piped.submit(r)
+    piped.run_to_completion()
+    snap = tel.metrics.snapshot()
+    for stage in ("admit", "fetch", "scatter", "forward", "swap"):
+        name = f"{piped.obs_name}.stage.{stage}_s"
+        assert name in snap["windowed"], sorted(snap["windowed"])
+        assert snap["windowed"][name]["lifetime_count"] == 2  # 2 batches
+
+
+# ---------------------------------------------------------------------------
+# compare_bench: the verdict matrix and the CLI round trip
+# ---------------------------------------------------------------------------
+
+def _record(metrics, sweep="demo", config=None):
+    return make_bench_record(sweep, config=config or {"shape": 1},
+                             metrics=metrics)
+
+
+def test_compare_bench_verdict_matrix():
+    base = _record({
+        "lat_ms": make_metric(10.0, "ms", "lower_is_better", 0.10),
+        "hit_rate": make_metric(0.90, "1", "higher_is_better", 0.02),
+        "gone": make_metric(1.0, "1", "lower_is_better", 0.1),
+        "gone_info": make_metric(1.0, "1", "lower_is_better", None),
+        "wall_s": make_metric(3.0, "s", "lower_is_better", None),
+        "zero": make_metric(0.0, "1", "lower_is_better", 0.5),
+    })
+    cur = _record({
+        "lat_ms": make_metric(8.0, "ms", "lower_is_better", 0.10),
+        "hit_rate": make_metric(0.70, "1", "higher_is_better", 0.02),
+        "wall_s": make_metric(30.0, "s", "lower_is_better", None),
+        "zero": make_metric(0.4, "1", "lower_is_better", 0.5),
+        "brand_new": make_metric(5.0, "1", "lower_is_better", 0.1),
+    })
+    cmp_ = compare_bench(base, cur)
+    by = {v.metric: v.status for v in cmp_.verdicts}
+    assert by == {
+        "lat_ms": "improvement",          # 20% faster, beyond tolerance
+        "hit_rate": "regression",         # -22% relative, gates
+        "gone": "missing_metric",         # gated metric vanished: gates
+        "gone_info": "informational",     # informational vanished: ok
+        "wall_s": "informational",        # 10x slower but never gates
+        "zero": "within_tolerance",       # baseline 0 -> absolute delta
+        "brand_new": "new_metric",
+    }
+    assert not cmp_.ok
+    gating = {v.metric for v in cmp_.verdicts if v.gating}
+    assert gating == {"hit_rate", "gone"}
+
+
+def test_compare_bench_config_hash_gate():
+    base = _record({"m": make_metric(1.0, "1", "lower_is_better", 0.1)},
+                   config={"rows": 64})
+    cur = _record({"m": make_metric(1.0, "1", "lower_is_better", 0.1)},
+                  config={"rows": 128})
+    cmp_ = compare_bench(base, cur)
+    assert not cmp_.ok and "config hash changed" in cmp_.failures[0]
+    assert compare_bench(base, cur, allow_config_change=True).ok
+    assert config_hash({"rows": 64}) != config_hash({"rows": 128})
+    assert base["config_hash"] == config_hash({"rows": 64})
+
+
+def test_compare_bench_direction_flip_fails():
+    base = _record({"m": make_metric(1.0, "1", "lower_is_better", 0.1)})
+    cur = _record({"m": make_metric(1.0, "1", "higher_is_better", 0.1)})
+    cmp_ = compare_bench(base, cur)
+    assert not cmp_.ok and "flipped direction" in cmp_.failures[0]
+
+
+def test_make_metric_validation():
+    with pytest.raises(ValueError, match="direction"):
+        make_metric(1.0, "ms", "sideways", 0.1)
+    with pytest.raises(ValueError, match="tolerance"):
+        make_metric(1.0, "ms", "lower_is_better", -0.5)
+    with pytest.raises(ValueError, match="make_metric"):
+        make_bench_record("s", config={}, metrics={"m": {"value": 1.0}})
+
+
+def test_bench_record_round_trip_and_provenance(tmp_path):
+    rec = _record({"m": make_metric(1.0, "1", "lower_is_better", 0.1)})
+    path = str(tmp_path / "BENCH_demo.json")
+    write_bench(path, rec)
+    loaded = load_bench(path)
+    assert loaded == json.loads(json.dumps(rec, default=str))
+    assert {"git_sha", "timestamp_utc", "jax_version"} <= \
+        set(loaded["provenance"])
+    with pytest.raises(ValueError, match="not a BenchRecord"):
+        bad = str(tmp_path / "bad.json")
+        with open(bad, "w") as f:
+            json.dump({"hello": 1}, f)
+        load_bench(bad)
+
+
+def test_bench_cli_bless_then_compare(tmp_path, capsys):
+    cur_dir, base_dir = tmp_path / "cur", tmp_path / "baselines"
+    cur_dir.mkdir()
+    path = str(cur_dir / "BENCH_demo.json")
+    write_bench(path, _record(
+        {"hit_rate": make_metric(0.9, "1", "higher_is_better", 0.02)}))
+    # no baseline yet: compare passes with a bless hint
+    assert bench_main(["compare", path, "--baselines",
+                       str(base_dir)]) == 0
+    assert "NO BASELINE" in capsys.readouterr().out
+    assert bench_main(["bless", path, "--baselines", str(base_dir)]) == 0
+    assert bench_main(["compare", path, "--baselines",
+                       str(base_dir)]) == 0
+    assert "bench gate: clean" in capsys.readouterr().out
+    # regress the metric: the gate must fail with exit code 1
+    write_bench(path, _record(
+        {"hit_rate": make_metric(0.5, "1", "higher_is_better", 0.02)}))
+    assert bench_main(["compare", path, "--baselines",
+                       str(base_dir)]) == 1
+    out = capsys.readouterr().out
+    assert "regression" in out and "FAIL" in out
