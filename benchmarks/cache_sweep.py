@@ -68,8 +68,10 @@ PAPER_TABLE_BYTES = 10e12 / 26     # Fig. 9's 10 TB model, per table
 
 
 def count_cached_launches(shape: dict) -> int:
-    """Structural single-launch proof for the cached hot path."""
-    from repro.cache import CachedEmbeddingBag
+    """Structural single-launch proof for the cached hot path — the
+    device-lookup contract audited over the sweep's own shapes."""
+    from repro.analysis import audit
+    from repro.cache import CachedEmbeddingBag, cached_bag
 
     cfg = EmbeddingBagConfig(
         num_tables=shape["tables"], rows_per_table=shape["rows"],
@@ -81,9 +83,11 @@ def count_cached_launches(shape: dict) -> int:
     idx = jax.ShapeDtypeStruct(
         (shape["tables"], shape["batch"], shape["pooling"]), jnp.int32)
     w = jax.ShapeDtypeStruct(idx.shape, jnp.float32)
-    jaxpr = str(jax.make_jaxpr(
-        lambda p, i, ww: bag.device_lookup(p, i, None, ww))(pool, idx, w))
-    return jaxpr.count("pallas_call")
+    report = audit(lambda p, i, ww: bag.device_lookup(p, i, None, ww),
+                   (pool, idx, w),
+                   cached_bag.KERNEL_CONTRACTS["device_lookup"])
+    report.raise_if_failed()
+    return report.summary.pallas_calls
 
 
 def run_config(ratio: float, a: float, policy: str, shape: dict,

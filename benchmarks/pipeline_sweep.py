@@ -125,7 +125,7 @@ def _run(engine, reqs):
     return scores, time.perf_counter() - t0
 
 
-def measured(shape: dict) -> dict:
+def measured(shape: dict, stage_trace: str = None) -> dict:
     cfg = dlrm_cfg.DLRMConfig(
         num_sparse_features=shape["tables"],
         rows_per_table=shape["rows"],
@@ -219,6 +219,20 @@ def measured(shape: dict) -> dict:
     print(f"  OK: depth-2 wall {piped_wall:.3f}s < serialized "
           f"prefetch+forward spans {serial_span_sum:.3f}s "
           f"(overlap fraction {ps.overlap_fraction:.2f})")
+    if stage_trace:
+        # recorded timeline artifact for the epoch-protocol sanitizer
+        # (python -m repro.analysis --protocol-trace <path>)
+        import json
+        with open(stage_trace, "w") as fh:
+            json.dump({
+                "schema_version": 1,
+                "engine": "piped",
+                "depth": 2,
+                "spans": [dataclasses.asdict(s)
+                          for s in piped.trace.spans],
+            }, fh, indent=1)
+        print(f"  stage trace ({len(piped.trace.spans)} spans) -> "
+              f"{stage_trace}")
     return rows
 
 
@@ -254,12 +268,16 @@ def main():
     ap.add_argument("--csv", type=str, default=None)
     ap.add_argument("--bench", type=str, default="BENCH_pipeline.json",
                     help="BenchRecord output ('' to skip)")
+    ap.add_argument("--stage-trace", type=str, default=None,
+                    help="write the pipelined engine's recorded StageSpan "
+                         "timeline as JSON (replayed by python -m "
+                         "repro.analysis --protocol-trace)")
     args = ap.parse_args()
 
     shape = SMOKE if args.smoke else FULL
     rep = SweepReport("sweep", "hosts", "hit_rate", "depth", "platform",
                       "per_batch_us", "recovery")
-    m = measured(shape)
+    m = measured(shape, stage_trace=args.stage_trace)
     rep.add(sweep="measured", hosts=1,
             hit_rate=f"{m['hit_rate_piped']:.3f}", depth=1,
             platform="cpu-host",

@@ -42,17 +42,25 @@ def count_launches(T: int, fused: bool) -> int:
     import jax.numpy as jnp
     from repro.kernels import ops as kops
 
+    from repro.analysis import audit, count_pallas_calls
+
     tables = jax.ShapeDtypeStruct((T, R, D), jnp.float32)
     idx = jax.ShapeDtypeStruct((T, B, L), jnp.int32)
     w = jax.ShapeDtypeStruct((T, B, L), jnp.float32)
-    jaxpr = str(jax.make_jaxpr(
-        lambda t, i, ww: kops.embedding_bag_batched(
-            t, i, None, ww, mode="interpret", fused=fused)
-    )(tables, idx, w))
-    n = jaxpr.count("pallas_call")
-    # under vmap the T launches appear as ONE batched call-site; report the
-    # executed grid instances
-    return n if fused else n * T
+
+    def fn(t, i, ww):
+        return kops.embedding_bag_batched(t, i, None, ww,
+                                          mode="interpret", fused=fused)
+
+    if fused:
+        # the sweep's structural claim: audit the attached contract
+        report = audit(fn, (tables, idx, w),
+                       kops.KERNEL_CONTRACTS["tbe_fused"])
+        report.raise_if_failed()
+        return report.summary.pallas_calls
+    # under vmap the T launches appear as ONE batched call-site; report
+    # the executed grid instances
+    return count_pallas_calls(fn, tables, idx, w) * T
 
 
 def measure(T: int, fused: bool, mode: str, reps: int) -> float:

@@ -111,14 +111,19 @@ def measured(shape: dict) -> dict:
         bag.prefetch(b)
     s = bag.stats
 
-    # the fused single-launch guarantee under the remote tier layout
+    # the fused single-launch guarantee under the remote tier layout —
+    # audited against the attached device-lookup contract
+    from repro.analysis import audit
+    from repro.cache import cached_bag
     pool = jax.ShapeDtypeStruct(bag.pool.shape, bag.pool.dtype)
     idx = jax.ShapeDtypeStruct((T, shape["batch"], shape["pooling"]),
                                jnp.int32)
     w = jax.ShapeDtypeStruct(idx.shape, jnp.float32)
-    jaxpr = str(jax.make_jaxpr(
-        lambda p, i, ww: bag.device_lookup(p, i, None, ww))(pool, idx, w))
-    launches = jaxpr.count("pallas_call")
+    report = audit(lambda p, i, ww: bag.device_lookup(p, i, None, ww),
+                   (pool, idx, w),
+                   cached_bag.KERNEL_CONTRACTS["device_lookup"])
+    report.raise_if_failed()
+    launches = report.summary.pallas_calls
 
     # instrumented fetch traffic (no HLO parsing): trace one fetch program
     from jax.sharding import Mesh, PartitionSpec as P

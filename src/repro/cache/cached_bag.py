@@ -252,3 +252,18 @@ class CachedEmbeddingBag:
     @property
     def pool_bytes(self) -> int:
         return self.hot.nbytes
+
+
+# ---------------------------------------------------------------------------
+# Kernel contracts (audited by repro.analysis)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import KernelContract  # noqa: E402
+
+KERNEL_CONTRACTS = {
+    "device_lookup": KernelContract(
+        name="cache.cached_bag.device_lookup",
+        note="the cached hot path is ONE fused gather+pool pallas_call "
+             "over the flat slot pool — no collectives, no callbacks; "
+             "every miss byte moved by the explicit prefetch instead"),
+}

@@ -290,3 +290,20 @@ class RemoteStore(TableStore):
             * self.shards.dtype.itemsize,
             self.hosts, self.backend, t0, time.perf_counter())
         return result
+
+
+# ---------------------------------------------------------------------------
+# Kernel contracts (audited by repro.analysis)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import KernelContract  # noqa: E402
+
+KERNEL_CONTRACTS = {
+    "scatter_rows": KernelContract(
+        name="cache.tiers.scatter_rows",
+        min_pallas_calls=0, max_pallas_calls=0,
+        donate_argnums=(0,),
+        note="the slot-pool admission scatter is a donated in-place "
+             "XLA scatter (argnum 0 buffer-aliased) — dropping the "
+             "donation would copy the whole pool every prefetch"),
+}

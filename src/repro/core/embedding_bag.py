@@ -549,3 +549,17 @@ def pooled_lookup_cached(cache, batch: JaggedBatch) -> jax.Array:
     when the cold tiers live off-device; exact (bitwise) once prefetched.
     """
     return cache.lookup(batch)
+
+
+# ---------------------------------------------------------------------------
+# Kernel contracts (audited by repro.analysis)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import KernelContract  # noqa: E402
+
+KERNEL_CONTRACTS = {
+    "pooled_lookup_local": KernelContract(
+        name="core.embedding_bag.pooled_lookup_local",
+        note="replicated-table lookup (2-D flat pool or 3-D stacked) "
+             "stays ONE fused TBE launch regardless of layout"),
+}

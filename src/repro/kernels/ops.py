@@ -327,3 +327,27 @@ def embedding_bag_rw_partial_batched(
     lookup = _pooled_lookup_tbe if fused else _pooled_lookup_per_table
     out = lookup(table_shards, safe, eff_w, mode == "interpret")
     return out.astype(table_shards.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Kernel contracts (audited by repro.analysis)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import KernelContract  # noqa: E402
+
+# The paper's structural claims for this module, as declarative specs:
+# tests, sweeps, and `python -m repro.analysis --contracts` all audit
+# against THESE objects instead of re-asserting launch counts ad hoc.
+KERNEL_CONTRACTS = {
+    "tbe_fused": KernelContract(
+        name="kernels.ops.embedding_bag_batched[fused]",
+        note="ALL T tables' gather+pool execute in ONE pallas_call "
+             "(flattened (T*R, D) row space, scalar-prefetched offsets)"),
+    "tbe_flat": KernelContract(
+        name="kernels.ops.embedding_bag_batched_flat",
+        note="the flat (sum S_t, D) slot-pool TBE stays one launch"),
+    "rw_partial_fused": KernelContract(
+        name="kernels.ops.embedding_bag_rw_partial_batched[fused]",
+        note="the row-wise-sharded partial pool stays one launch; "
+             "reduction across shards happens OUTSIDE the kernel"),
+}

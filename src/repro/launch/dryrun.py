@@ -27,7 +27,6 @@ the framework's distribution config — the cell list below must be green.
 """
 import argparse
 import json
-import re
 import sys
 import time
 import traceback
@@ -53,63 +52,10 @@ ART_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
 # ---------------------------------------------------------------------------
 # Collective-traffic extraction from post-SPMD HLO
 # ---------------------------------------------------------------------------
-
-_DTYPE_BYTES = {
-    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
-    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
-    "c128": 16,
-}
-
-_COLL_RE = re.compile(
-    r"=\s*(\([^)]*\)|[a-z0-9]+\[[0-9,]*\][^ ]*)\s+"
-    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
-    r"(?:-start)?\(")
-_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
-_GROUPS_RE = re.compile(r"replica_groups=\{(\{[0-9,]+\})")
-_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
-
-
-def _shape_bytes(shape_str: str) -> int:
-    """Total bytes of the LAST shape in a (possibly tuple) HLO shape str."""
-    matches = _SHAPE_RE.findall(shape_str)
-    if not matches:
-        return 0
-    dt, dims = matches[-1]
-    n = 1
-    for d in dims.split(","):
-        if d:
-            n *= int(d)
-    return n * _DTYPE_BYTES.get(dt, 4)
-
-
-def parse_collectives(hlo_text: str):
-    """Per-device operand bytes by op, from one SPMD module's text."""
-    out = {"all-gather": 0, "all-reduce": 0, "reduce-scatter": 0,
-           "all-to-all": 0, "collective-permute": 0}
-    counts = dict.fromkeys(out, 0)
-    for line in hlo_text.splitlines():
-        m = _COLL_RE.search(line)
-        if not m:
-            continue
-        shape_str, op = m.group(1), m.group(2)
-        result = _shape_bytes(shape_str)
-        g = 1
-        mg = _IOTA_GROUPS_RE.search(line)
-        if mg:
-            g = int(mg.group(2))
-        else:
-            mg2 = _GROUPS_RE.search(line)
-            if mg2:
-                g = mg2.group(1).count(",") + 1
-        if op == "all-gather":
-            operand = result // max(g, 1)
-        elif op == "reduce-scatter":
-            operand = result * g
-        else:
-            operand = result
-        out[op] += operand
-        counts[op] += 1
-    return out, counts
+# The parser lives in repro.analysis.contracts now (stdlib-only import —
+# safe before jax init), shared with the contract auditor's audit_hlo;
+# re-exported here because the dry-run is its historical home.
+from repro.analysis.contracts import parse_collectives  # noqa: E402,F401
 
 
 # ---------------------------------------------------------------------------
@@ -216,13 +162,13 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         tc = tc or TrainConfig(remat=True, optimizer_state_dtype="int8")
         mesh = make_production_mesh(multi_pod=multi_pod)
         ctx = make_context(mesh, sharding_cfg)
-        t0 = time.time()
+        t0 = time.perf_counter()
         with mesh:
             fn, args = build_cell(arch, shape_name, ctx, tc, overrides)
             lowered = fn.lower(*args)
-            t1 = time.time()
+            t1 = time.perf_counter()
             compiled = lowered.compile()
-            t2 = time.time()
+            t2 = time.perf_counter()
         mem = compiled.memory_analysis()
         cost = compiled.cost_analysis() or {}
         hlo_text = compiled.as_text()
@@ -322,7 +268,7 @@ def run_dlrm_cell(cache_rows: int = 0, cold_tier: str = "host",
         jax.ShapeDtypeStruct((T, batch, cfg.pooling), jnp.int32),
         jax.ShapeDtypeStruct((T, batch), jnp.int32))
 
-    t0 = time.time()
+    t0 = time.perf_counter()
     if cache_rows:
         fn = jax.jit(lambda p, d, b: dlrm_mod.forward(p, d, b, cfg, None))
         compiled = fn.lower(params_t, dense_t, batch_t).compile()
@@ -336,15 +282,18 @@ def run_dlrm_cell(cache_rows: int = 0, cold_tier: str = "host",
     coll, counts = parse_collectives(compiled.as_text())
     record.update({
         "status": "ok",
-        "compile_s": round(time.time() - t0, 2),
+        "compile_s": round(time.perf_counter() - t0, 2),
         "table_bytes": T * (cache_rows or R) * D * 4,
         "collective_bytes": coll,
         "collective_counts": counts,
         "memory_analysis": _mem_dict(compiled.memory_analysis()),
     })
     if cache_rows:
-        assert sum(counts.values()) == 0, \
-            f"tiered serving program must issue NO collectives: {counts}"
+        # collective-free serving contract, audited over the compiled HLO
+        from repro.analysis.contracts import audit_hlo
+        from repro.serving.engine import KERNEL_CONTRACTS
+        audit_hlo(compiled.as_text(),
+                  KERNEL_CONTRACTS["tiered_forward"]).raise_if_failed()
     print(f"[{tag}] compile {record['compile_s']}s  "
           f"table/pool bytes {record['table_bytes']:.3e}  "
           f"collectives {counts}")

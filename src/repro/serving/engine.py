@@ -662,3 +662,19 @@ def make_dlrm_engine(params, cfg: DLRMConfig, batch_size: int,
     cls = PipelinedDLRMEngine if cfg.cache.pipeline_depth > 1 else DLRMEngine
     return cls(params, cfg, batch_size, ctx, telemetry=telemetry,
                obs_name=obs_name)
+
+
+# ---------------------------------------------------------------------------
+# Kernel contracts (audited by repro.analysis)
+# ---------------------------------------------------------------------------
+
+from repro.analysis.contracts import KernelContract  # noqa: E402
+
+KERNEL_CONTRACTS = {
+    "tiered_forward": KernelContract(
+        name="serving.engine.tiered_forward",
+        note="the tiered serving program (flat-pool DLRM forward + "
+             "sigmoid) runs ONE fused TBE launch and must compile to "
+             "ZERO collectives and ZERO host callbacks — all cold-tier "
+             "traffic happens in the explicit prefetch phase"),
+}

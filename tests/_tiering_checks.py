@@ -20,7 +20,9 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.analysis import audit
 from repro.cache import CacheConfig, RemoteStore
+from repro.cache import cached_bag
 from repro.core import comm
 from repro.core.embedding_bag import (
     EmbeddingBagConfig, init_tables, make_cache, pooled_lookup_local,
@@ -165,9 +167,9 @@ def remote_lookup_bitwise_bulk():
     pool = jax.ShapeDtypeStruct(cache.pool.shape, cache.pool.dtype)
     idx = jax.ShapeDtypeStruct((2, 8, 5), jnp.int32)
     w = jax.ShapeDtypeStruct((2, 8, 5), jnp.float32)
-    jaxpr = str(jax.make_jaxpr(
-        lambda p, i, ww: cache.device_lookup(p, i, None, ww))(pool, idx, w))
-    assert jaxpr.count("pallas_call") == 1
+    audit(lambda p, i, ww: cache.device_lookup(p, i, None, ww),
+          (pool, idx, w),
+          cached_bag.KERNEL_CONTRACTS["device_lookup"]).raise_if_failed()
 
 
 def remote_lookup_bitwise_onesided():

@@ -8,7 +8,9 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import audit
 from repro.cache import CacheConfig, CachedEmbeddingBag, SlotPoolManager
+from repro.cache import cached_bag
 from repro.core.embedding_bag import (
     EmbeddingBagConfig,
     init_tables,
@@ -179,9 +181,9 @@ def test_cached_hot_path_single_pallas_call():
     pool = jax.ShapeDtypeStruct(cache.pool.shape, cache.pool.dtype)
     idx = jax.ShapeDtypeStruct((4, 8, 5), jnp.int32)
     w = jax.ShapeDtypeStruct((4, 8, 5), jnp.float32)
-    jaxpr = str(jax.make_jaxpr(
-        lambda p, i, ww: cache.device_lookup(p, i, None, ww))(pool, idx, w))
-    assert jaxpr.count("pallas_call") == 1
+    audit(lambda p, i, ww: cache.device_lookup(p, i, None, ww),
+          (pool, idx, w),
+          cached_bag.KERNEL_CONTRACTS["device_lookup"]).raise_if_failed()
 
 
 # ---------------------------------------------------------------------------

@@ -107,10 +107,13 @@ def test_old_and_new_configs_normalize_equal():
     """Golden: the flat-field spelling and the CacheConfig spelling land
     on EQUAL configs (dataclass equality over every field)."""
     with pytest.warns(DeprecationWarning):
-        old = EmbeddingBagConfig(num_tables=2, rows_per_table=32, dim=4,
-                                 kernel_mode="reference",
-                                 cache_rows=8, cache_policy="lru",
-                                 cold_tier="remote", remote_backend="bulk")
+        old = EmbeddingBagConfig(
+            num_tables=2, rows_per_table=32, dim=4,
+            kernel_mode="reference",
+            cache_rows=8,        # lint: allow[deprecated-cache-field] -- golden test OF the deprecation shim
+            cache_policy="lru",  # lint: allow[deprecated-cache-field] -- golden test OF the deprecation shim
+            cold_tier="remote",  # lint: allow[deprecated-cache-field] -- golden test OF the deprecation shim
+            remote_backend="bulk")  # lint: allow[deprecated-cache-field] -- golden test OF the deprecation shim
     new = EmbeddingBagConfig(num_tables=2, rows_per_table=32, dim=4,
                              kernel_mode="reference",
                              cache=CacheConfig(rows=8, policy="lru",
@@ -118,8 +121,11 @@ def test_old_and_new_configs_normalize_equal():
                                                remote_backend="bulk"))
     assert old == new
     with pytest.warns(DeprecationWarning):
-        old_d = dataclasses.replace(dlrm_cfg.smoke(), cache_rows=24,
-                                    cache_policy="lru", pipeline_depth=2)
+        old_d = dataclasses.replace(
+            dlrm_cfg.smoke(),
+            cache_rows=24,       # lint: allow[deprecated-cache-field] -- golden test OF the deprecation shim
+            cache_policy="lru",  # lint: allow[deprecated-cache-field] -- golden test OF the deprecation shim
+            pipeline_depth=2)
     new_d = dataclasses.replace(
         dlrm_cfg.smoke(),
         cache=CacheConfig(rows=24, policy="lru", pipeline_depth=2))
@@ -145,7 +151,10 @@ def _requests(cfg, n, rng):
 def test_golden_old_style_engine_matches_new_style():
     base = dataclasses.replace(dlrm_cfg.smoke(), kernel_mode="reference")
     with pytest.warns(DeprecationWarning):
-        old = dataclasses.replace(base, cache_rows=24, cache_policy="lru")
+        old = dataclasses.replace(
+            base,
+            cache_rows=24,        # lint: allow[deprecated-cache-field] -- golden test OF the deprecation shim
+            cache_policy="lru")   # lint: allow[deprecated-cache-field] -- golden test OF the deprecation shim
     new = dataclasses.replace(base,
                               cache=CacheConfig(rows=24, policy="lru"))
     assert old == new

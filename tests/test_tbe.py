@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.analysis import audit
 from repro.core.embedding_bag import (
     EmbeddingBagConfig,
     init_tables,
@@ -100,21 +101,21 @@ def test_tbe_grad_matches_reference():
 
 
 def test_tbe_single_pallas_call():
-    """The fused path must execute ALL tables in ONE pallas_call; the
-    unfused baseline must launch once per table (under vmap: T grid
-    instances of one call-site)."""
+    """The fused path must execute ALL tables in ONE pallas_call —
+    audited against the module's attached KernelContract (launch count,
+    no collectives, no callbacks, no dtype upcasts in one pass)."""
     tables, idx, lens, _ = _mk(8)
     eff_w = jnp.ones(idx.shape, jnp.float32)
 
-    fused_jaxpr = str(jax.make_jaxpr(
-        lambda t, i, w: kops.embedding_bag_batched(
-            t, i, None, w, mode="interpret", fused=True))(tables, idx, eff_w))
-    assert fused_jaxpr.count("pallas_call") == 1
+    audit(lambda t, i, w: kops.embedding_bag_batched(
+              t, i, None, w, mode="interpret", fused=True),
+          (tables, idx, eff_w),
+          kops.KERNEL_CONTRACTS["tbe_fused"]).raise_if_failed()
 
-    rw_jaxpr = str(jax.make_jaxpr(
-        lambda t, i: kops.embedding_bag_rw_partial_batched(
-            t, 0, i, mode="interpret", fused=True))(tables[:, :8], idx))
-    assert rw_jaxpr.count("pallas_call") == 1
+    audit(lambda t, i: kops.embedding_bag_rw_partial_batched(
+              t, 0, i, mode="interpret", fused=True),
+          (tables[:, :8], idx),
+          kops.KERNEL_CONTRACTS["rw_partial_fused"]).raise_if_failed()
 
 
 def test_pooled_lookup_local_fused_switch():
