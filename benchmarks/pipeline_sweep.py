@@ -125,7 +125,8 @@ def _run(engine, reqs):
     return scores, time.perf_counter() - t0
 
 
-def measured(shape: dict, stage_trace: str = None) -> dict:
+def measured(shape: dict, stage_trace: str = None,
+             perf_gate: bool = True) -> dict:
     cfg = dlrm_cfg.DLRMConfig(
         num_sparse_features=shape["tables"],
         rows_per_table=shape["rows"],
@@ -210,18 +211,10 @@ def measured(shape: dict, stage_trace: str = None) -> dict:
     for stage in ("admit", "fetch", "scatter", "forward", "swap"):
         print(f"    piped stage {stage:8s} "
               f"{piped.trace.total(stage) / n * 1e3:8.2f} ms/batch")
-    # acceptance: the pipelined per-batch wall-clock beats the SUM of
-    # the serialized prefetch+forward spans — overlap is real, measured
-    assert piped_wall < serial_span_sum, (
-        f"no overlap win: piped wall {piped_wall:.3f}s >= serialized "
-        f"prefetch+forward span sum {serial_span_sum:.3f}s")
-    assert ps.overlap_s > 0.0
-    print(f"  OK: depth-2 wall {piped_wall:.3f}s < serialized "
-          f"prefetch+forward spans {serial_span_sum:.3f}s "
-          f"(overlap fraction {ps.overlap_fraction:.2f})")
     if stage_trace:
         # recorded timeline artifact for the epoch-protocol sanitizer
-        # (python -m repro.analysis --protocol-trace <path>)
+        # (python -m repro.analysis --protocol-trace <path>) — written
+        # before the perf gate so the artifact survives a timing miss
         import json
         with open(stage_trace, "w") as fh:
             json.dump({
@@ -233,6 +226,22 @@ def measured(shape: dict, stage_trace: str = None) -> dict:
             }, fh, indent=1)
         print(f"  stage trace ({len(piped.trace.spans)} spans) -> "
               f"{stage_trace}")
+    # acceptance: the pipelined per-batch wall-clock beats the SUM of
+    # the serialized prefetch+forward spans — overlap is real, measured
+    won = piped_wall < serial_span_sum and ps.overlap_s > 0.0
+    if won:
+        print(f"  OK: depth-2 wall {piped_wall:.3f}s < serialized "
+              f"prefetch+forward spans {serial_span_sum:.3f}s "
+              f"(overlap fraction {ps.overlap_fraction:.2f})")
+    elif perf_gate:
+        raise AssertionError(
+            f"no overlap win: piped wall {piped_wall:.3f}s >= serialized "
+            f"prefetch+forward span sum {serial_span_sum:.3f}s")
+    else:
+        print(f"  WARNING: no overlap win on this host (piped wall "
+              f"{piped_wall:.3f}s vs serialized spans "
+              f"{serial_span_sum:.3f}s) — perf gate disabled, "
+              f"continuing")
     return rows
 
 
@@ -272,12 +281,17 @@ def main():
                     help="write the pipelined engine's recorded StageSpan "
                          "timeline as JSON (replayed by python -m "
                          "repro.analysis --protocol-trace)")
+    ap.add_argument("--no-perf-gate", action="store_true",
+                    help="demote the overlap-win assertion to a warning; "
+                         "for jobs that only need the recorded timeline "
+                         "(score exactness is always enforced)")
     args = ap.parse_args()
 
     shape = SMOKE if args.smoke else FULL
     rep = SweepReport("sweep", "hosts", "hit_rate", "depth", "platform",
                       "per_batch_us", "recovery")
-    m = measured(shape, stage_trace=args.stage_trace)
+    m = measured(shape, stage_trace=args.stage_trace,
+                 perf_gate=not args.no_perf_gate)
     rep.add(sweep="measured", hosts=1,
             hit_rate=f"{m['hit_rate_piped']:.3f}", depth=1,
             platform="cpu-host",

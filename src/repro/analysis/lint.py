@@ -244,35 +244,48 @@ class _Visitor(ast.NodeVisitor):
 # Module-level rules (export drift, schema pins)
 # ---------------------------------------------------------------------------
 
+class _ModuleScopeBinder(ast.NodeVisitor):
+    """Collect every name bound at module scope — defs, classes,
+    imports, plus any Store-context Name (assignments, ``for`` targets,
+    ``with ... as``, walrus, unpacking) at any statement depth — while
+    refusing to descend into nested scopes (function/lambda bodies,
+    comprehensions), whose bindings are not module attributes."""
+
+    def __init__(self) -> None:
+        self.names: set = set()
+
+    def visit_FunctionDef(self, node: ast.FunctionDef) -> None:
+        self.names.add(node.name)
+
+    def visit_AsyncFunctionDef(self, node) -> None:
+        self.names.add(node.name)
+
+    def visit_ClassDef(self, node: ast.ClassDef) -> None:
+        self.names.add(node.name)
+
+    def visit_Lambda(self, node: ast.Lambda) -> None:
+        pass
+
+    def visit_ListComp(self, node) -> None:
+        pass
+
+    visit_SetComp = visit_DictComp = visit_GeneratorExp = visit_ListComp
+
+    def visit_Import(self, node: ast.Import) -> None:
+        for alias in node.names:
+            self.names.add(alias.asname or alias.name.split(".")[0])
+
+    visit_ImportFrom = visit_Import
+
+    def visit_Name(self, node: ast.Name) -> None:
+        if isinstance(node.ctx, ast.Store):
+            self.names.add(node.id)
+
+
 def _bound_names(tree: ast.Module) -> FrozenSet[str]:
-    names = set()
-    for node in tree.body:
-        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef,
-                             ast.ClassDef)):
-            names.add(node.name)
-        elif isinstance(node, ast.Assign):
-            for target in node.targets:
-                for sub in ast.walk(target):
-                    if isinstance(sub, ast.Name):
-                        names.add(sub.id)
-        elif isinstance(node, ast.AnnAssign) and \
-                isinstance(node.target, ast.Name):
-            names.add(node.target.id)
-        elif isinstance(node, (ast.Import, ast.ImportFrom)):
-            for alias in node.names:
-                names.add(alias.asname or alias.name.split(".")[0])
-        elif isinstance(node, (ast.If, ast.Try)):
-            # shallow conditional binds (TYPE_CHECKING / try-import)
-            for sub in ast.walk(node):
-                if isinstance(sub, (ast.Import, ast.ImportFrom)):
-                    for alias in sub.names:
-                        names.add(alias.asname or alias.name.split(".")[0])
-                elif isinstance(sub, ast.Assign):
-                    for target in sub.targets:
-                        for s2 in ast.walk(target):
-                            if isinstance(s2, ast.Name):
-                                names.add(s2.id)
-    return frozenset(names)
+    binder = _ModuleScopeBinder()
+    binder.visit(tree)
+    return frozenset(binder.names)
 
 
 def _check_exports(tree: ast.Module, path: str) -> List[LintViolation]:

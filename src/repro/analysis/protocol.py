@@ -274,12 +274,15 @@ def check_timeline(spans: Sequence, depth: int = 2,
     for w in writes:
         for r in reads:
             if w.batch == r.batch:
-                if w.end > r.start and _overlaps(w, r):
+                # Ordering, not overlap: a scatter that starts after its
+                # own forward already ended is just as broken.
+                if w.end > r.start:
                     violations.append(ProtocolViolation(
                         "scatter-after-dispatch",
                         f"batch {w.batch}'s scatter "
-                        f"[{w.start:.6f}, {w.end:.6f}] overlaps its own "
-                        f"forward dispatched at {r.start:.6f}"))
+                        f"[{w.start:.6f}, {w.end:.6f}] does not complete "
+                        f"before its own forward dispatched at "
+                        f"{r.start:.6f}"))
                 continue
             if slot(w.batch) == slot(r.batch) and _overlaps(w, r):
                 violations.append(ProtocolViolation(

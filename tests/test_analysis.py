@@ -295,6 +295,15 @@ def test_timeline_flags_scatter_after_own_dispatch():
     assert any(v.kind == "scatter-after-dispatch" for v in violations)
 
 
+def test_timeline_flags_scatter_entirely_after_own_forward():
+    """Ordering, not overlap: a scatter that runs strictly AFTER its own
+    forward already finished never overlaps it, yet the forward read an
+    uncommitted buffer — must still be flagged."""
+    spans = [_span("forward", 0, 1.0, 2.0), _span("scatter", 0, 5.0, 6.0)]
+    violations = check_timeline(spans, depth=2)
+    assert any(v.kind == "scatter-after-dispatch" for v in violations)
+
+
 def _zipf_requests(cfg, n, rng):
     T, L, F = (cfg.num_sparse_features, cfg.pooling,
                cfg.num_dense_features)
@@ -408,6 +417,22 @@ def test_lint_export_drift():
     assert rules.count("export-drift") == 2     # stale name + duplicate
     clean = "__all__ = ['real']\ndef real():\n    pass\n"
     assert _rules(clean) == []
+
+
+def test_lint_export_drift_sees_all_module_scope_bindings():
+    """Names bound by for-loops, `with ... as`, walrus, and unpacking at
+    module scope are legitimate exports; names bound only inside a
+    function or comprehension are not."""
+    clean = ("__all__ = ['looped', 'ctx', 'walrus', 'a', 'b']\n"
+             "for looped in (1, 2):\n    pass\n"
+             "with open('x') as ctx:\n    pass\n"
+             "if (walrus := 3):\n    pass\n"
+             "a, (b, _) = 1, (2, 3)\n")
+    assert _rules(clean) == []
+    nested = ("__all__ = ['inner', 'comp']\n"
+              "def outer():\n    inner = 1\n"
+              "vals = [comp for comp in (1, 2)]\n")
+    assert _rules(nested).count("export-drift") == 2
 
 
 def test_lint_schema_pin_key_drift():
